@@ -1,0 +1,35 @@
+"""Shared helpers for the benchmark suite (one module per paper artifact)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def art_path(*parts: str) -> str:
+    p = os.path.join(ART_DIR, *parts)
+    os.makedirs(os.path.dirname(p), exist_ok=True)
+    return p
+
+
+def save_json(name: str, obj: Any) -> str:
+    p = art_path(name)
+    with open(p, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return p
+
+
+def csv_row(name: str, value: float, derived: str = "") -> str:
+    return f"{name},{value:.6g},{derived}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *exc):
+        self.wall_s = time.time() - self.t0

@@ -1,0 +1,57 @@
+"""Fig 5 analog: computation scaling — tiles 1/2/4 x MAC array 2K/4K."""
+from __future__ import annotations
+
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import WORKLOADS
+from repro.hw.chip import simulate
+from repro.hw.presets import paper_skew
+
+from .common import save_json
+
+
+def run() -> dict:
+    rows = []
+    for wname, builder in WORKLOADS.items():
+        ops = builder()
+        base = None
+        for n_mxu, macs_tag in ((1, "2K"), (2, "4K")):
+            for nt in (1, 2, 4):
+                cfg = paper_skew(n_mxu=n_mxu)
+                cw = compile_ops(ops, cfg, CompileOptions(n_tiles=nt))
+                t = simulate(cw.tasks, cfg, n_tiles=nt).makespan_ns
+                fps = 1e9 / t
+                if base is None:
+                    base = fps
+                rows.append({"model": wname, "tiles": nt, "macs": macs_tag,
+                             "inf_per_s": fps, "speedup_vs_1t2K": fps / base})
+    save_json("computation_scaling.json", rows)
+    # paper headline factors
+    f12, f24, fmac = [], [], []
+    for wname in WORKLOADS:
+        r = {(x["tiles"], x["macs"]): x["inf_per_s"] for x in rows
+             if x["model"] == wname}
+        f12.append(r[(2, "2K")] / r[(1, "2K")])
+        f24.append(r[(4, "2K")] / r[(2, "2K")])
+        fmac.append(r[(1, "4K")] / r[(1, "2K")])
+    summary = {
+        "avg_scaling_1_to_2_tiles": sum(f12) / len(f12),
+        "avg_scaling_2_to_4_tiles": sum(f24) / len(f24),
+        "avg_gain_2K_to_4K_macs": sum(fmac) / len(fmac),
+    }
+    save_json("computation_scaling_summary.json", summary)
+    return {"rows": rows, "summary": summary}
+
+
+def main(print_csv=True):
+    out = run()
+    if print_csv:
+        s = out["summary"]
+        print(f"# Fig-5 analog (paper: 1.9x, 1.47x, +25-45%)")
+        print(f"tiles 1->2: {s['avg_scaling_1_to_2_tiles']:.2f}x   "
+              f"2->4: {s['avg_scaling_2_to_4_tiles']:.2f}x   "
+              f"2K->4K MACs: +{100*(s['avg_gain_2K_to_4K_macs']-1):.0f}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Fig 9 analog: joint perf/power across models x operating frequencies,
+plus the battery-life DVFS policy pick (lowest energy meeting a floor)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import WORKLOADS
+from repro.hw.presets import paper_skew
+from repro.power.dvfs import choose_operating_point, sweep
+
+from .common import save_json
+
+
+def run() -> dict:
+    cfg = paper_skew()
+    freqs = [round(f, 1) for f in np.arange(0.3, 1.25, 0.1)]  # 100MHz steps
+    all_rows = {}
+    picks = {}
+    for wname, builder_fn in WORKLOADS.items():
+        ops = builder_fn()
+
+        def builder(c):
+            return compile_ops(ops, c, CompileOptions(n_tiles=2)).tasks
+
+        pts = sweep(builder, cfg, freqs, n_tiles=2)
+        all_rows[wname] = [p.__dict__ for p in pts]
+        floor = 0.5 * max(p.inf_per_s for p in pts)
+        pick = choose_operating_point(pts, floor)
+        picks[wname] = {"floor_inf_per_s": floor,
+                        "freq_ghz": pick.freq_ghz if pick else None,
+                        "avg_w": pick.avg_w if pick else None}
+    save_json("dvfs_sweep.json", {"rows": all_rows, "picks": picks})
+    return {"rows": all_rows, "picks": picks}
+
+
+def main(print_csv=True):
+    out = run()
+    if print_csv:
+        print("# Fig-9 analog: workload-specific DVFS operating points")
+        for w, p in out["picks"].items():
+            print(f"{w:>14s}: >= {p['floor_inf_per_s']:7.1f} inf/s -> "
+                  f"{p['freq_ghz']} GHz @ {p['avg_w']:.1f} W")
+    return out
+
+
+if __name__ == "__main__":
+    main()

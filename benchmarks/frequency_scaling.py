@@ -1,0 +1,49 @@
+"""Fig 6 analog: performance + power vs clock frequency (joint analysis)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import resnet50
+from repro.hw.presets import paper_skew
+from repro.power.dvfs import sweep
+
+from .common import save_json
+
+
+def run() -> dict:
+    cfg = paper_skew()
+    ops = resnet50()
+
+    def builder(c):
+        return compile_ops(ops, c, CompileOptions(n_tiles=2)).tasks
+
+    freqs = [round(f, 2) for f in np.arange(0.3, 1.25, 0.1)]
+    pts = sweep(builder, cfg, freqs, n_tiles=2)
+    rows = [p.__dict__ for p in pts]
+    save_json("frequency_scaling.json", rows)
+    # paper claims: perf ~linear in F; power superlinear (V^2)
+    perf_ratio = pts[-1].inf_per_s / pts[0].inf_per_s
+    power_ratio = pts[-1].avg_w / pts[0].avg_w
+    freq_ratio = pts[-1].freq_ghz / pts[0].freq_ghz
+    summary = {"freq_ratio": freq_ratio, "perf_ratio": perf_ratio,
+               "power_ratio": power_ratio,
+               "efficiency_best_at_ghz": min(
+                   pts, key=lambda p: 1.0 / max(p.inf_per_j, 1e-9)).freq_ghz}
+    save_json("frequency_scaling_summary.json", summary)
+    return {"rows": rows, "summary": summary}
+
+
+def main(print_csv=True):
+    out = run()
+    if print_csv:
+        s = out["summary"]
+        print("# Fig-6 analog: perf ~linear, power superlinear in F")
+        print(f"F x{s['freq_ratio']:.1f} -> perf x{s['perf_ratio']:.2f}, "
+              f"power x{s['power_ratio']:.2f}; best inf/J at "
+              f"{s['efficiency_best_at_ghz']} GHz")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Framework-wide before/after: paper-faithful baseline artifacts
+(`dryrun_baseline/`) vs the optimized framework defaults (`dryrun/`),
+three roofline terms per cell. Quantifies how much of the §Perf hillclimb
+transferred to ALL cells (remat_chunk, serving sharding planner, decode
+q-replication, vocab-sharded logits)."""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from repro.graph.hlo_parser import summarize
+
+from .common import ART_DIR, save_json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+
+def _terms(path):
+    s = summarize(gzip.open(path, "rt").read(), pod_size=256)
+    return {
+        "compute_s": s.dot_flops / PEAK_FLOPS,
+        "memory_s": s.hbm_bytes / HBM_BW,
+        "collective_s": (s.link_bytes(cross_pod=False) / ICI_BW
+                         + s.link_bytes(cross_pod=True) / DCN_BW),
+    }
+
+
+def run() -> dict:
+    rows = []
+    for newp in sorted(glob.glob(os.path.join(ART_DIR, "dryrun",
+                                              "*.hlo.txt.gz"))):
+        base = newp.replace("/dryrun/", "/dryrun_baseline/")
+        if not os.path.exists(base):
+            continue
+        cell = os.path.basename(newp).replace(".hlo.txt.gz", "")
+        tb = _terms(base)
+        tn = _terms(newp)
+        dom_b = max(tb, key=tb.get)
+        rows.append({
+            "cell": cell,
+            "baseline": tb, "optimized": tn,
+            "dominant_baseline": dom_b,
+            "dominant_term_ratio": (tn[dom_b] / tb[dom_b]
+                                    if tb[dom_b] > 0 else 1.0),
+        })
+    save_json("perf_delta.json", rows)
+    return {"rows": rows}
+
+
+def main(print_csv=True):
+    out = run()
+    rows = out["rows"]
+    if print_csv and rows:
+        improved = [r for r in rows if r["dominant_term_ratio"] < 0.95]
+        regressed = [r for r in rows if r["dominant_term_ratio"] > 1.05]
+        import numpy as np
+
+        ratios = [r["dominant_term_ratio"] for r in rows]
+        print(f"# optimized/baseline dominant-term ratio over {len(rows)} "
+              f"cells: geomean {np.exp(np.mean(np.log(ratios))):.3f} "
+              f"({len(improved)} improved >5%, {len(regressed)} regressed)")
+        for r in sorted(rows, key=lambda r: r["dominant_term_ratio"])[:12]:
+            print(f"  {r['cell']:52s} {r['dominant_baseline']:10s} "
+                  f"x{r['dominant_term_ratio']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Fig 8 analog: per-module transient power over PTI bins for one model."""
+from __future__ import annotations
+
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import resnet50
+from repro.hw.chip import System
+from repro.hw.presets import paper_skew
+from repro.power.powerem import PowerEM
+
+from .common import save_json
+
+
+def run(pti_ns: float = 20_000.0) -> dict:
+    cfg = paper_skew()
+    ops = resnet50()
+    cw = compile_ops(ops, cfg, CompileOptions(n_tiles=2))
+    sysm = System(cfg, n_tiles=2)
+    rep = sysm.run_workload(cw.tasks)
+    pem = PowerEM(cfg, n_tiles=2)
+    prep = pem.analyze(sysm.tracer, pti_ns=pti_ns)
+    out = {
+        "pti_ns": pti_ns,
+        "makespan_ms": rep.makespan_ns / 1e6,
+        "series_w": prep.series,
+        "peak_w": prep.peak_w,
+        "avg_w": prep.avg_w,
+        "energy_mj_per_inf": prep.energy_j() * 1e3,
+    }
+    save_json("power_profile.json", out)
+    return out
+
+
+def main(print_csv=True):
+    out = run()
+    if print_csv:
+        print(f"# Fig-8 analog: transient power, PTI={out['pti_ns']/1e3:.0f}us"
+              f"  (peak {out['peak_w']:.1f} W, avg {out['avg_w']:.1f} W,"
+              f" {out['energy_mj_per_inf']:.2f} mJ/inf)")
+        mods = sorted(out["series_w"])
+        n = len(next(iter(out["series_w"].values())))
+        head = "bin   " + " ".join(f"{m:>12s}" for m in mods)
+        print(head)
+        for b in range(min(n, 8)):
+            print(f"{b:4d}  " + " ".join(
+                f"{out['series_w'][m][b]:12.2f}" for m in mods))
+    return out
+
+
+if __name__ == "__main__":
+    main()

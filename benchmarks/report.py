@@ -1,0 +1,351 @@
+"""Render EXPERIMENTS.md from the benchmark/dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import ART_DIR
+
+PERF_LOG = __name__  # placeholder to keep file self-contained; body below
+
+
+def _load(name):
+    p = os.path.join(ART_DIR, name)
+    if os.path.exists(p):
+        return json.load(open(p))
+    return None
+
+
+def _cells(subdir="dryrun") -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART_DIR, subdir, "*.json"))):
+        out.append(json.load(open(p)))
+    return out
+
+
+def dryrun_section() -> str:
+    cells = _cells()
+    ok = [c for c in cells if c["status"] == "ok"]
+    skip = [c for c in cells if c["status"] == "skip"]
+    fail = [c for c in cells if c["status"] == "fail"]
+    lines = ["## §Dry-run", ""]
+    lines.append(
+        f"All {len(cells)} cells = 10 architectures x 4 input shapes x "
+        f"2 production meshes (16x16 = 256 chips single-pod; 2x16x16 = 512 "
+        f"chips across two pods). **{len(ok)} compile OK, {len(skip)} "
+        f"structural skips, {len(fail)} failures.** Every cell lowers with "
+        "`jax.jit(...).lower(**ShapeDtypeStructs).compile()` — no array "
+        "allocation; `memory_analysis()`/`cost_analysis()` and the gzip'd "
+        "optimized HLO are archived in `benchmarks/artifacts/dryrun/`.")
+    lines.append("")
+    lines.append("| arch | shape | mesh | program | compile_s | "
+                 "args GiB/chip | XLA flops/chip | status |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c["status"] == "ok":
+            args = c["memory_analysis"].get("argument_size_in_bytes", 0)
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                f"{c['program']} | {c.get('compile_s', 0):.1f} | "
+                f"{args/2**30:.2f} | "
+                f"{c['cost_analysis'].get('flops', 0):.2e} | ok |")
+        else:
+            reason = c.get("skip_reason", c.get("error", ""))[:60]
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                         f"{c['program']} | — | — | — | "
+                         f"{c['status']}: {reason} |")
+    lines.append("")
+    lines.append(
+        "Structural skips (9 logical cells x 2 meshes): `long_500k` for the "
+        "8 pure full-attention archs (512k dense-attention decode is "
+        "quadratic/KV-infeasible by design; the shape targets sub-quadratic "
+        "archs and runs for xlstm-125m + hymba-1.5b), and `decode_*` for "
+        "hubert-xlarge (encoder-only: no autoregressive step; its "
+        "`prefill_32k` is a 32k-frame encoder forward). "
+        "Note: XLA `cost_analysis()` flops under-count scanned layers "
+        "(while bodies visited once) — the §Roofline numbers use the "
+        "trip-count-aware parser instead.")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    rows = (_load("roofline.json") or [])
+    ok = [r for r in rows if r.get("status") == "ok"]
+    lines = ["## §Roofline", ""]
+    lines.append(
+        "Per-chip roofline terms from the compiled per-device HLO "
+        "(trip-count-aware parse; TPU v5e constants: 197 TFLOP/s bf16, "
+        "819 GB/s HBM, 50 GB/s/link ICI, 25 GB/s DCN). "
+        "`MFU-bound` = (MODEL_FLOPS/chips/peak) / max(term) — how close the "
+        "*useful* math runs to the hardware ceiling with perfect overlap; "
+        "`useful` = MODEL_FLOPS / HLO FLOPs (remat/redundancy waste). "
+        "Single-pod rows are the baseline table; multi-pod rows prove the "
+        "pod axis (cross-pod DCN bytes shown).")
+    lines.append("")
+    lines.append("| arch | shape | mesh | compute_s | memory_s | "
+                 "collective_s (xpod) | dominant | MFU-bound | useful | "
+                 "what moves the dominant term |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} ({r['collective_cross_pod_s']:.4f}) | "
+            f"**{r['dominant']}** | {r['roofline_fraction']:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['suggestion'][:70]}... |")
+    lines.append("")
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    lines.append(f"Bottleneck census: {doms}. The CPU backend materializes "
+                 "f32 copies around bf16 dots and fuses less than the TPU "
+                 "backend, so memory terms are upper bounds (bf16-native "
+                 "collectives/buffers halve the affected payloads on real "
+                 "hardware); dtype converts are already counted free "
+                 "(TPU fuses them) — see DESIGN.md §assumption-changes.")
+    return "\n".join(lines)
+
+
+def paper_validation_section() -> str:
+    lines = ["## Validation against the paper's own claims", ""]
+    cs = _load("computation_scaling_summary.json")
+    if cs:
+        lines.append(
+            f"* **Fig 5 (computation scaling)** — paper: ~1.9x for 1->2 "
+            f"tiles, ~1.47x for 2->4, +25-45% for 2K->4K MACs. Ours: "
+            f"**{cs['avg_scaling_1_to_2_tiles']:.2f}x**, "
+            f"**{cs['avg_scaling_2_to_4_tiles']:.2f}x**, "
+            f"**+{100*(cs['avg_gain_2K_to_4K_macs']-1):.0f}%** "
+            f"(same qualitative structure: tile scaling saturates on the "
+            f"shared DDR/DMA; bigger arrays alone underutilize).")
+    fs = _load("frequency_scaling_summary.json")
+    if fs:
+        lines.append(
+            f"* **Fig 6 (frequency scaling)** — paper: perf linear in F, "
+            f"power super-linear, best efficiency at low F. Ours: F x"
+            f"{fs['freq_ratio']:.1f} -> perf x{fs['perf_ratio']:.2f}, power "
+            f"x{fs['power_ratio']:.2f}; best inf/J at "
+            f"{fs['efficiency_best_at_ghz']} GHz.")
+    ms = _load("membw_scaling_summary.json")
+    if ms:
+        lines.append(
+            f"* **Fig 7 (memory-BW scaling)** — paper: DDR BW matters most "
+            f"for dense models + limited CB. Ours: 8->68 GB/s gives x"
+            f"{ms['small_CB']:.2f} with a small CB vs x{ms['large_CB']:.2f} "
+            f"with a large CB.")
+    ac = _load("accuracy_characterization.json")
+    if ac:
+        dense = [abs(r["em_vs_ref_pct"]) for r in ac if "_S" not in r["model"]]
+        sparse = [abs(r["nn_vs_ref_pct"]) for r in ac if "_S" in r["model"]]
+        lines.append(
+            f"* **Table 1 (accuracy characterization)** — paper: EM within "
+            f"5-10% of RTL on dense models; the learned cost model (VPUNN) "
+            f"degrades badly on sparse variants. Ours (REF = detailed event "
+            f"sim): EM-fast |err| = **{sum(dense)/len(dense):.1f}%** avg on "
+            f"dense variants; TPU-NN |err| on sparse variants = "
+            f"**{sum(sparse)/max(len(sparse),1):.1f}%** (same failure "
+            f"structure: per-op models miss concurrency).")
+    ss = _load("sim_speed.json")
+    if ss:
+        rn = next((r for r in ss if r["workload"] == "resnet50"), None)
+        if rn:
+            lines.append(
+                f"* **§2.3 speed objective** — paper: ResNet50-class full "
+                f"model within minutes. Ours: **{rn['wall_s']:.2f} s** "
+                f"({rn['tasks_per_s']:.0f} tasks/s); pod-scale LM replay of "
+                f"a compiled decode step also simulates in seconds.")
+    pp = _load("power_profile.json")
+    if pp:
+        lines.append(
+            f"* **Fig 8 (power profiling)** — per-module transient power "
+            f"over {pp['pti_ns']/1e3:.0f}us PTIs: peak {pp['peak_w']:.1f} W "
+            f"vs avg {pp['avg_w']:.1f} W on ResNet50 "
+            f"({pp['energy_mj_per_inf']:.2f} mJ/inf).")
+    dv = _load("dvfs_sweep.json")
+    if dv:
+        picks = ", ".join(f"{k}: {v['freq_ghz']} GHz"
+                          for k, v in dv["picks"].items())
+        lines.append(
+            f"* **Fig 9 (joint perf/power DVFS)** — 100 MHz sweep per "
+            f"model; lowest-energy points meeting a 50%-of-peak floor: "
+            f"{picks}.")
+    return "\n".join(lines)
+
+
+def perf_delta_section() -> str:
+    rows = _load("perf_delta.json")
+    if not rows:
+        return ""
+    import numpy as np
+
+    ratios = [r["dominant_term_ratio"] for r in rows]
+    geo = float(np.exp(np.mean(np.log(ratios))))
+    improved = [r for r in rows if r["dominant_term_ratio"] < 0.95]
+    regressed = sorted((r for r in rows if r["dominant_term_ratio"] > 1.05),
+                       key=lambda r: -r["dominant_term_ratio"])
+    best = sorted(rows, key=lambda r: r["dominant_term_ratio"])[:6]
+    lines = ["### Framework-wide before/after (all 62 cells)", ""]
+    lines.append(
+        f"Re-lowering every cell under the optimized defaults vs the "
+        f"preserved paper-faithful baseline artifacts: **geomean "
+        f"dominant-term ratio {geo:.3f}** ({len(improved)} cells improved "
+        f">5%, {len(regressed)} regressed >5%). Biggest wins (all decode "
+        f"cells, collective-bound at baseline):")
+    lines.append("")
+    for r in best:
+        lines.append(f"* {r['cell']}: {r['dominant_baseline']} x"
+                     f"{r['dominant_term_ratio']:.3f}")
+    lines.append("")
+    lines.append(
+        "The 'regressions' are the other side of the serving trade: weight "
+        "replication makes each chip read the full weight set from its own "
+        "HBM instead of all-gathering shards over ICI — decode memory terms "
+        "rise x1.1-1.7 (tiny absolute values) while collective terms drop "
+        "10-1000x; every regressed cell's max term still shrinks or stays "
+        "within noise of its baseline bound.")
+    return "\n".join(lines)
+
+
+def training_section() -> str:
+    p = os.path.join(ART_DIR, "train_lm_e2e.txt")
+    if not os.path.exists(p):
+        return ""
+    body = open(p).read().strip()
+    return ("## End-to-end training run (examples/train_lm.py)\n\n"
+            "Full (non-reduced) SmolLM-135M, synthetic tokens, AdamW+cosine,"
+            " checkpoints every ~20 steps (restart-safe; the run below "
+            "includes the post-fan_in-fix loss descent):\n\n```\n"
+            + body + "\n```")
+
+
+def main():
+    print("# EXPERIMENTS — TPU-EM reproduction of VPU-EM (Qi et al., 2023)")
+    print()
+    print("All numbers generated by `PYTHONPATH=src python -m "
+          "benchmarks.run` (+ the dry-run sweep); artifacts under "
+          "`benchmarks/artifacts/`. This file is rendered by "
+          "`python -m benchmarks.report`.")
+    print()
+    print(paper_validation_section())
+    print()
+    print(dryrun_section())
+    print()
+    print(roofline_section())
+    print()
+    print(PERF_BODY)
+    pd = perf_delta_section()
+    if pd:
+        print()
+        print(pd)
+    ts = training_section()
+    if ts:
+        print()
+        print(ts)
+
+
+PERF_BODY = r"""## §Perf — hillclimbing log (hypothesis -> change -> measure)
+
+Method per the paper's own spirit: form a napkin-math hypothesis from the
+compiled artifact, change one thing, re-lower, re-measure the three terms.
+The **paper-faithful baseline** is the initial framework (chunked jnp
+attention, full `nothing_saveable` remat, one sharding ruleset for train
+and serve); artifacts preserved in `benchmarks/artifacts/dryrun_baseline/`.
+The **optimized framework** (current defaults) is what the final
+`benchmarks/artifacts/dryrun/` sweep measures. Three cells were hillclimbed;
+all other cells are baseline-only (re-lowered under the final defaults).
+
+### Cell A — qwen3-32b / decode_32k / 2x16x16 (most representative: pod serving)
+
+| iter | hypothesis | change | collective payload B/chip | replayed step (TPU-EM) | verdict |
+|---|---|---|---|---|---|
+| base | — | paper-faithful | 8.04e9 | 496 ms | baseline |
+| A1 | GSPMD all-gathers the (d x V) head in f32 every step because logits are unconstrained | constrain logits to vocab-sharded (`model.py::_logits`) | 8.0e9 (head gather gone) | 403 ms | confirmed (small term) |
+| A2 | 33 MB/layer FSDP weight gathers dominate a decode step; serving should replicate weights over `data` | serving memory planner: `fsdp=False` for serve programs under 8 GB/chip (`launch/programs.py`) | **3.58e7 (-224x)** | 270 ms | **confirmed** |
+| A3 | remaining vector time is CPU-backend f32<->bf16 round-trips that a TPU build fuses | `free_converts` TPU semantics in the parser (validated: the convert chains wrap in-place cache updates) | 3.58e7 | **82 ms** | confirmed (accounting fix, applied to all cells) |
+| A4 | q constrained to heads-TP conflicts with the kv_seq-sharded cache (cache all-gather per layer) | replicate q heads in decode (`blocks.py::_attn_decode`) | kept at 3.6e7 under head-TP archs | — | confirmed (required for A2 to hold on head-TP archs) |
+
+Net: collective term 8.04e9 -> 3.58e7 bytes (flash-decoding small
+all-reduces only); TPU-EM replayed step 496 -> 82 ms (6x, matched replay
+settings at measurement time). The replay is latency-bound (dependency
+chain), matching real decode behavior. The final replay benchmark
+(`benchmarks/lm_replay.py`) uses stricter HBM-streaming semantics (large
+compute IO charged through DMA) and reports the optimized cell at ~96 ms,
+inside its [hard-bound, memory-upper-bound] corridor.
+
+### Cell B — smollm-135m / train_4k / 16x16 (worst memory-bound fraction)
+
+| iter | hypothesis | change | HLO flops/chip | HBM B/chip | memory term | verdict |
+|---|---|---|---|---|---|---|
+| base | — | paper-faithful | 8.60e12 | 1.477e12 | 1.80 s | baseline |
+| B1 | the q-chunk `lax.map` stacks per-chunk f32 scores + pred masks as backward residuals (~70% of traffic) | `jax.checkpoint` around each attention chunk (`attention.py::remat_chunk`, now default) | 9.18e12 (+7% recompute) | 1.387e12 | 1.69 s | partially confirmed — stacked buffers gone, but the softmax chain recompute keeps most traffic; understanding refined |
+| B2 | backward re-runs the whole O(S^2) score pipeline; saving the [B,S,H,hd] attention outputs (2.3 GB for this arch) skips it | named-checkpoint policy `save-attn` (`model.py::remat_policy`) | 8.02e12 | 1.113e12 | 1.36 s | **confirmed** (-25% HBM, -7% flops) |
+| B3 | 8 q-chunks re-read K/V 8x; fewer, larger chunks amortize | `q_chunk` 512 -> 2048 | 8.02e12 | 9.60e11 | 1.17 s | **confirmed** (-35% total) |
+| B4 | single chunk (no map) removes the last stacking copies | `q_chunk` 4096 | 8.02e12 | 9.35e11 | 1.14 s | confirmed, marginal (-2.7%) — stop rule hit |
+| B5 | the remaining 25% of HBM traffic is score-pipeline tiles; the flash-attention Pallas kernel keeps them in VMEM | measured score-shaped traffic in the final artifact: 2.36e11 B | — | (9.35-2.36)e11 | **0.85 s** kernel-adjusted | kernel validated vs oracle in interpret mode (`tests/test_kernels.py`); effect quantified from the artifact, not compilable on the CPU dry-run |
+
+Net (measured): memory term 1.80 -> 1.14 s (-37%); kernel-adjusted
+projection 0.85 s (-53%). Dominant term remains memory: the rest is
+parameter/activation streaming (inherent at 135M params x 1M tokens/step
+on 256 chips).
+
+### Cell C — llama-3.2-vision-90b / train_4k / 16x16 (most collective-bound)
+
+| iter | hypothesis | change | HBM B/chip | link B/chip | verdict |
+|---|---|---|---|---|---|
+| base | — | paper-faithful | 6.10e13 | 3.90e12 | baseline |
+| C1 | B1's stacked-score fix transfers | re-lower with `remat_chunk` | 5.87e13 (-4%) | 3.90e12 | confirmed, small (this cell's scores are head-TP-sharded already) |
+| C2 | CE's reshape+swapaxes materializes a transposed f32 copy of the hidden stream (~10% of bytes) | chunked CE reads `dynamic_slice` windows (`layers.py`) | 5.87e13 | 3.90e12 | **refuted** — XLA had already sunk the transpose; the f32[65536,8192] traffic is the loss-gradient stream, not the CE input |
+| C3 | Megatron-SP residual (seq-sharded stream) turns backward dgrad all-reduces into reduce-scatters | `sp_residual` rules flag | 7.35e13 | 1.88e13 (**5x worse**) | **refuted** — GSPMD re-shards seq<->heads around every attention; flag kept but off |
+| C4 | the 2.1 GB f32 [16,4096,8192] activation all-reduces (540x) are the Megatron heads-TP tax, doubled by the CPU backend's f32 promotion | analysis: on a TPU build these are bf16 -> collective term ~39 s, memory ~35-40 s | — | — | documented correction; the honest fix at this scale is more chips (90B x 1M tokens/step on 256 v5e is under-provisioned) plus the flash kernel for the 1.1e13 B score pipeline |
+
+Net: this cell is the fleet-sizing lesson the roofline is for — after B1
+and dtype corrections the step is bound at ~39 s/step collective /
+~35 s memory vs 13.7 s of useful compute (MFU-bound ~0.35 at perfect
+overlap). Two refuted hypotheses recorded per the methodology.
+
+### Cross-cutting wins applied framework-wide (beyond the paper)
+
+* serving-vs-training sharding split (A2) — all decode/prefill cells.
+* decode q-replication under head-TP (A4) — all decode cells.
+* logits vocab-sharding (A1) — all serve cells.
+* attention chunk remat (B1) + `save-attn` policy available per-arch (B2).
+* MoE one-hot GSPMD dispatch for un-splittable token dims (decode) with the
+  sort-based shard_map EP path for bulk tokens — both validated against the
+  dense oracle.
+* int8 error-feedback gradient compression for the cross-pod axis
+  (validated numerically; modeled in TPU-EM as 4x DCN byte reduction).
+* Pallas kernels (flash attention / fused RMSNorm / SSM scan) validated
+  against jnp oracles in interpret mode — the TPU-side answer to the
+  dominant memory terms above.
+
+### Found by the end-to-end run (examples/train_lm.py)
+
+The full-config 135M training run surfaced an init bug the reduced-config
+smoke tests could not: `PT.fan_in` defaulted to `shape[-2]`, which for
+`[d, H, hd]` projection layouts picks the HEAD COUNT (9 for smollm) instead
+of `d` (576) — QKV weights ~14x too large, gradients exploding at depth 30
+(global grad norm ~1e12). Fixed by explicit `fan_in` in every 3D+ template;
+post-fix global grad norm ~20 and the loss actually descends (artifact:
+`benchmarks/artifacts/train_lm_e2e.txt`). Depth-dependent bugs need
+full-depth runs — exactly why the e2e example is a deliverable.
+
+### Paper §6.2 future work, implemented
+
+* **Stack-EM** (`graph/stackem.py`): multi-context use-case scheduling —
+  per-context submission queues, priority dispatch, per-request e2e
+  latency; tests show co-running contexts inflating a camera stream's
+  latency (the software-stack effect the mode exists to expose).
+* **Active power-state management** (`power/powerem.py::analyze(power_gating=True)`):
+  modules idle for N consecutive PTIs drop to a gated state (retention
+  leakage only, wake charged at full idle power); energy savings asserted
+  in tests on bursty traces.
+"""
+
+
+if __name__ == "__main__":
+    main()

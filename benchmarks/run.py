@@ -1,0 +1,101 @@
+"""Benchmark suite driver — one module per paper table/figure.
+
+  accuracy_characterization  Table 1   EM-fast / TPU-NN vs event sim
+  computation_scaling        Fig 5     tiles x MAC-array scaling
+  frequency_scaling          Fig 6     perf + power vs clock
+  membw_scaling              Fig 7     DDR/HBM BW x CB capacity
+  power_profile              Fig 8     per-module transient power (PTI)
+  dvfs_sweep                 Fig 9     joint perf/power + DVFS policy
+  sim_speed                  §2.3      full-model simulation wall time
+  roofline                   (ours)    3-term roofline per dry-run cell
+
+Prints a ``name,value,derived`` CSV line per headline metric; artifacts in
+benchmarks/artifacts/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (accuracy_characterization, computation_scaling, dvfs_sweep,
+               frequency_scaling, lm_replay, membw_scaling, perf_delta,
+               power_profile, roofline, sim_speed)
+from .common import csv_row
+
+
+def main() -> int:
+    t0 = time.time()
+    print("== computation_scaling (Fig 5) ==")
+    cs = computation_scaling.main()
+    s = cs["summary"]
+    print(csv_row("scaling_1to2_tiles_x", s["avg_scaling_1_to_2_tiles"],
+                  "paper~1.9"))
+    print(csv_row("scaling_2to4_tiles_x", s["avg_scaling_2_to_4_tiles"],
+                  "paper~1.47"))
+    print(csv_row("gain_2K_to_4K_macs_x", s["avg_gain_2K_to_4K_macs"],
+                  "paper~1.25-1.45"))
+
+    print("\n== frequency_scaling (Fig 6) ==")
+    fs = frequency_scaling.main()
+    print(csv_row("freq_perf_ratio", fs["summary"]["perf_ratio"],
+                  "near-linear"))
+    print(csv_row("freq_power_ratio", fs["summary"]["power_ratio"],
+                  "super-linear"))
+
+    print("\n== membw_scaling (Fig 7) ==")
+    ms = membw_scaling.main()
+    print(csv_row("bw_sensitivity_small_cb_x", ms["summary"]["small_CB"]))
+    print(csv_row("bw_sensitivity_large_cb_x", ms["summary"]["large_CB"]))
+
+    print("\n== power_profile (Fig 8) ==")
+    pp = power_profile.main()
+    print(csv_row("power_peak_w", pp["peak_w"]))
+    print(csv_row("power_avg_w", pp["avg_w"]))
+
+    print("\n== dvfs_sweep (Fig 9) ==")
+    dvfs_sweep.main()
+
+    print("\n== accuracy_characterization (Table 1) ==")
+    ac = accuracy_characterization.main()
+    dense = [abs(r["em_vs_ref_pct"]) for r in ac["rows"]
+             if "_S" not in r["model"]]
+    print(csv_row("em_fast_abs_err_dense_pct", sum(dense) / len(dense),
+                  "paper: <=5-10%"))
+
+    print("\n== sim_speed (objective §2.3) ==")
+    ss = sim_speed.main()
+    print(csv_row("resnet50_sim_wall_s",
+                  next(r["wall_s"] for r in ss["rows"]
+                       if r["workload"] == "resnet50"), "paper: minutes"))
+
+    print("\n== lm_replay (TPU-EM pod replay of compiled programs) ==")
+    lr = lm_replay.main()
+    if lr["rows"]:
+        print(csv_row("replay_bound_respected",
+                      float(all(r["bound_respected"] for r in lr["rows"]))))
+
+    print("\n== roofline (dry-run artifacts) ==")
+    rf = roofline.main(print_csv=False)
+    ok = [r for r in rf["rows"] if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        print(csv_row("roofline_cells_ok", len(ok)))
+        print(csv_row("worst_roofline_fraction", worst["roofline_fraction"],
+                      f"{worst['arch']}/{worst['shape']}/{worst['mesh']}"))
+
+    print("\n== perf_delta (baseline vs optimized framework, all cells) ==")
+    pd = perf_delta.main()
+    if pd["rows"]:
+        import numpy as np
+
+        ratios = [r["dominant_term_ratio"] for r in pd["rows"]]
+        print(csv_row("dominant_term_geomean_ratio",
+                      float(np.exp(np.mean(np.log(ratios)))),
+                      "optimized/baseline, <1 is better"))
+
+    print(f"\nbenchmarks done in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Simulation-speed objective (paper §2.3: full model within minutes).
+
+Reports wall-clock per full-model simulation and the event rate, for the
+paper CNNs and for a pod-scale LM replay from a dry-run artifact."""
+from __future__ import annotations
+
+import glob
+import gzip
+import os
+import time
+
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import WORKLOADS
+from repro.hw.chip import simulate
+from repro.hw.presets import V5E, paper_skew
+
+from .common import ART_DIR, save_json
+
+
+def run() -> dict:
+    rows = []
+    for wname, builder in WORKLOADS.items():
+        ops = builder()
+        cfg = paper_skew()
+        cw = compile_ops(ops, cfg, CompileOptions(n_tiles=4))
+        t0 = time.time()
+        simulate(cw.tasks, cfg, n_tiles=4)
+        wall = time.time() - t0
+        rows.append({"workload": wname, "n_tasks": len(cw.tasks),
+                     "wall_s": wall, "tasks_per_s": len(cw.tasks) / wall})
+    # LM replay speed (if a decode artifact exists)
+    cand = sorted(glob.glob(os.path.join(
+        ART_DIR, "dryrun", "qwen3-32b__decode_32k__*.hlo.txt.gz")))
+    if cand:
+        from repro.graph.hlo_parser import extract_tasks
+        from repro.hw.pod import simulate_program
+
+        text = gzip.open(cand[0], "rt").read()
+        specs = extract_tasks(text, pod_size=256, max_tasks=50_000)
+        t0 = time.time()
+        simulate_program(specs, V5E)
+        wall = time.time() - t0
+        rows.append({"workload": "qwen3-32b decode (HLO replay)",
+                     "n_tasks": len(specs), "wall_s": wall,
+                     "tasks_per_s": len(specs) / wall})
+    save_json("sim_speed.json", rows)
+    return {"rows": rows}
+
+
+def main(print_csv=True):
+    out = run()
+    if print_csv:
+        print("# sim-speed objective (paper: ResNet50-class in minutes)")
+        for r in out["rows"]:
+            print(f"{r['workload']:>32s}: {r['n_tasks']:6d} tasks in "
+                  f"{r['wall_s']:6.2f}s ({r['tasks_per_s']:8.0f} tasks/s)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Architecture config registry — ``--arch <id>`` resolution.
+
+All 10 assigned architectures (plus the paper's own CNN-era workloads used
+by the accuracy benchmark live in ``repro.graph.workloads``, not here — these
+are the LM-family training/serving archs).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .base import ArchConfig, ShapeSpec, SHAPES, applicable, skip_reason
+
+from . import (
+    smollm_135m,
+    minicpm_2b,
+    qwen2_1_5b,
+    qwen3_32b,
+    hubert_xlarge,
+    qwen3_moe_30b_a3b,
+    phi35_moe_42b_a6_6b,
+    xlstm_125m,
+    llama32_vision_90b,
+    hymba_1_5b,
+)
+
+_MODULES = (
+    smollm_135m,
+    minicpm_2b,
+    qwen2_1_5b,
+    qwen3_32b,
+    hubert_xlarge,
+    qwen3_moe_30b_a3b,
+    phi35_moe_42b_a6_6b,
+    xlstm_125m,
+    llama32_vision_90b,
+    hymba_1_5b,
+)
+
+REGISTRY: Dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def list_archs() -> List[str]:
+    return list(REGISTRY)
+
+
+def get_config(name: str) -> ArchConfig:
+    """Resolve ``--arch`` ids; accepts dashed or underscored spellings."""
+    key = name.strip()
+    if key in REGISTRY:
+        return REGISTRY[key]
+    alt = key.replace("_", "-")
+    if alt in REGISTRY:
+        return REGISTRY[alt]
+    raise KeyError(f"unknown arch {name!r}; known: {', '.join(REGISTRY)}")
+
+
+def get_shape(name: str) -> ShapeSpec:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {', '.join(SHAPES)}")
+    return SHAPES[name]
+
+
+__all__ = [
+    "ArchConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "REGISTRY",
+    "applicable",
+    "skip_reason",
+    "list_archs",
+    "get_config",
+    "get_shape",
+]

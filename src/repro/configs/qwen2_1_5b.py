@@ -1,0 +1,18 @@
+"""Qwen2-1.5B — dense LM with GQA (kv=2) and QKV bias. [arXiv:2407.10671; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,          # GQA kv=2
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1000000.0,
+    norm_eps=1e-6,
+    source="[arXiv:2407.10671; hf]",
+)

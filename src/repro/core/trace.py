@@ -1,0 +1,170 @@
+"""Activity tracing — the data spine between performance and power models.
+
+Every hardware model emits ``ActivitySample`` records into a shared
+``Tracer`` while it processes events. The same records serve three consumers
+(paper §3.3/§5.1):
+
+  1. performance reports (per-engine busy time, utilization, timelines),
+  2. Power-EM PTI (power-trace-interval) activity aggregation,
+  3. test assertions (determinism, pipelining overlap).
+
+Samples are intervals, not instants: ``(module, kind, t0, t1, amount)``.
+``amount`` is in the module's native activity unit (bytes for DMA/NOC/memory,
+ops for MXU/vector unit — exactly the paper's Table 2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["ActivitySample", "Tracer", "TaskRecord"]
+
+
+@dataclass(frozen=True)
+class ActivitySample:
+    module: str       # hierarchical name, e.g. "pod0.chip3.mxu0"
+    kind: str         # "ops" | "bytes" | "busy"
+    t0: float         # ns
+    t1: float         # ns
+    amount: float     # native units over [t0, t1]
+
+    @property
+    def duration(self) -> float:
+        return self.t1 - self.t0
+
+
+@dataclass(frozen=True)
+class TaskRecord:
+    """Task-level event record (scheduler view)."""
+
+    task: str
+    engine: str
+    t_enqueue: float
+    t_start: float
+    t_end: float
+    meta: Tuple[Tuple[str, object], ...] = ()
+
+
+@dataclass
+class Tracer:
+    enabled: bool = True
+    samples: List[ActivitySample] = field(default_factory=list)
+    tasks: List[TaskRecord] = field(default_factory=list)
+
+    # -- emission ------------------------------------------------------------
+    def emit(self, module: str, kind: str, t0: float, t1: float, amount: float) -> None:
+        if self.enabled:
+            if t1 < t0:
+                raise ValueError(f"sample ends before it starts: {t0}..{t1}")
+            self.samples.append(ActivitySample(module, kind, t0, t1, amount))
+
+    def emit_task(self, rec: TaskRecord) -> None:
+        if self.enabled:
+            self.tasks.append(rec)
+
+    # -- queries ---------------------------------------------------------------
+    def modules(self) -> List[str]:
+        return sorted({s.module for s in self.samples})
+
+    def by_module(self, module: str, kind: Optional[str] = None) -> List[ActivitySample]:
+        return [
+            s
+            for s in self.samples
+            if s.module == module and (kind is None or s.kind == kind)
+        ]
+
+    def busy_time(self, module: str) -> float:
+        """Union length of the module's busy intervals (overlap-safe)."""
+        ivals = sorted((s.t0, s.t1) for s in self.samples if s.module == module)
+        total, cur0, cur1 = 0.0, None, None
+        for t0, t1 in ivals:
+            if cur1 is None or t0 > cur1:
+                if cur1 is not None:
+                    total += cur1 - cur0
+                cur0, cur1 = t0, t1
+            else:
+                cur1 = max(cur1, t1)
+        if cur1 is not None:
+            total += cur1 - cur0
+        return total
+
+    def total_amount(self, module: str, kind: str) -> float:
+        return sum(s.amount for s in self.samples if s.module == module and s.kind == kind)
+
+    def makespan(self) -> float:
+        return max((s.t1 for s in self.samples), default=0.0)
+
+    # -- PTI binning (Power-EM §5.1) ------------------------------------------
+    def pti_activity(
+        self,
+        module_prefix: str,
+        kind: str,
+        pti: float,
+        t_end: Optional[float] = None,
+    ) -> List[float]:
+        """Per-interval activity amounts for modules under ``module_prefix``.
+
+        A sample spanning several intervals contributes pro-rata (its rate is
+        assumed uniform over [t0, t1]) — this is how Power-EM captures
+        activity *temporally* as well as spatially.
+        """
+        if pti <= 0:
+            raise ValueError("pti must be > 0")
+        horizon = t_end if t_end is not None else self.makespan()
+        n = max(1, math.ceil(horizon / pti)) if horizon > 0 else 1
+        bins = [0.0] * n
+        for s in self.samples:
+            if not s.module.startswith(module_prefix) or s.kind != kind:
+                continue
+            if s.duration == 0:
+                idx = min(int(s.t0 / pti), n - 1)
+                bins[idx] += s.amount
+                continue
+            rate = s.amount / s.duration
+            b0 = int(s.t0 / pti)
+            b1 = min(int(math.ceil(s.t1 / pti)), n)
+            for b in range(b0, b1):
+                lo = max(s.t0, b * pti)
+                hi = min(s.t1, (b + 1) * pti)
+                if hi > lo:
+                    bins[b] += rate * (hi - lo)
+        return bins
+
+    def clear(self) -> None:
+        self.samples.clear()
+        self.tasks.clear()
+
+
+def to_chrome_trace(tracer: "Tracer") -> dict:
+    """Export the activity + task timeline as a Chrome/Perfetto trace
+    (chrome://tracing 'traceEvents' JSON). Engines become pids/tids;
+    task-level records and sub-task activity samples become complete
+    events — load the file in Perfetto to see the paper's Fig-8-style
+    pipeline/concurrency picture interactively."""
+    events = []
+    pids = {}
+
+    def pid_of(module: str) -> int:
+        root = module.split(".")[0]
+        if root not in pids:
+            pids[root] = len(pids) + 1
+            events.append({"ph": "M", "pid": pids[root], "name":
+                           "process_name", "args": {"name": root}})
+        return pids[root]
+
+    for rec in tracer.tasks:
+        events.append({
+            "ph": "X", "name": rec.task, "cat": "task",
+            "pid": pid_of(rec.engine), "tid": rec.engine,
+            "ts": rec.t_start / 1e3,              # us
+            "dur": max(rec.t_end - rec.t_start, 1e-3) / 1e3,
+            "args": {"queued_us": (rec.t_start - rec.t_enqueue) / 1e3},
+        })
+    for s in tracer.samples:
+        events.append({
+            "ph": "X", "name": f"{s.kind}={s.amount:.3g}", "cat": "activity",
+            "pid": pid_of(s.module), "tid": s.module,
+            "ts": s.t0 / 1e3, "dur": max(s.duration, 1e-3) / 1e3,
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}

@@ -1,0 +1,184 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / SP / EP).
+
+Models are written against *logical* axis names; a ``ShardingRules`` object
+maps them to physical mesh axes. Outside any rules context (CPU smoke tests)
+every constraint is a no-op, so the same model code runs on 1 device and on
+the 512-chip production mesh.
+
+Logical axes
+------------
+  batch      activation batch dim                    -> ('pod','data')
+  act_seq    activation sequence dim (SP regime)     -> 'model' | None
+  heads      attention-head dim (TP regime)          -> 'model' | None
+  kv_heads   kv-head dim                             -> usually None (small)
+  ff         FFN hidden dim                          -> 'model'
+  vocab      vocabulary dim (embed/logits)           -> 'model'
+  embed      parameter d_model dim (FSDP shard)      -> 'data'
+  expert     MoE expert dim                          -> 'model'
+  kv_seq     KV-cache sequence dim (flash-decoding)  -> 'model'
+  ssm_inner  SSM inner-channel dim                   -> 'model'
+  stack      layer-stack dim of scanned params       -> None (never sharded)
+
+Exactly one of {heads, act_seq} maps to 'model' for a given arch: head-TP
+when n_heads divides the model axis, sequence-parallel attention otherwise
+(divisibility-aware axis assignment).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "rules_for",
+    "active_rules",
+    "use_rules",
+    "constrain",
+    "logical_to_pspec",
+    "named_sharding",
+]
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    table: Dict[str, Axis]
+    moe_impl: str = "dense"      # "dense" | "ep"
+    ep_axis: Optional[str] = None
+
+    def axis_size(self, logical: str) -> int:
+        phys = self.table.get(logical)
+        if phys is None:
+            return 1
+        if isinstance(phys, str):
+            phys = (phys,)
+        n = 1
+        for a in phys:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def rules_for(
+    mesh: Mesh,
+    *,
+    n_heads: int = 0,
+    n_experts: int = 0,
+    d_ff: int = 0,
+    moe: bool = False,
+    fsdp: bool = True,
+    sp_residual: bool = False,
+) -> ShardingRules:
+    """Divisibility-aware assignment of logical->physical axes for one arch.
+
+    ``fsdp=False`` replicates parameters over the data axis (serving mode:
+    no optimizer state, and per-layer weight all-gathers would dominate a
+    decode step — the serving memory planner in launch/programs decides).
+    """
+    names = mesh.axis_names
+    data_axes: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in names)
+    model_ax = "model" if "model" in names else None
+    msize = mesh.shape[model_ax] if model_ax else 1
+
+    head_tp = model_ax is not None and n_heads > 0 and n_heads % msize == 0
+    table: Dict[str, Axis] = {
+        "batch": data_axes if data_axes else None,
+        "heads": model_ax if head_tp else None,
+        # sp_residual: Megatron-SP — keep the residual stream seq-sharded
+        # even under heads-TP (the rightmost-wins dedup in ``constrain``
+        # resolves the conflict inside attention/MLP tensors); turns the
+        # backward dgrad all-reduces into reduce-scatters
+        "act_seq": (model_ax if (sp_residual or not head_tp) else None),
+        "kv_heads": None,
+        "ff": model_ax if (d_ff == 0 or d_ff % max(msize, 1) == 0) else None,
+        "vocab": model_ax,
+        "embed": ("data" if ("data" in names and fsdp) else None),
+        "expert": model_ax,
+        "kv_seq": model_ax,
+        "ssm_inner": model_ax,
+        "stack": None,
+    }
+    ep_ok = moe and model_ax is not None and n_experts % max(msize, 1) == 0
+    return ShardingRules(
+        mesh=mesh,
+        table=table,
+        moe_impl="ep" if ep_ok else "dense",
+        ep_axis=model_ax if ep_ok else None,
+    )
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules: ShardingRules) -> P:
+    parts = []
+    for name in axes:
+        if name is None:
+            parts.append(None)
+        else:
+            parts.append(rules.table.get(name))
+    # trim trailing Nones (cosmetic)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(axes: Sequence[Optional[str]], rules: ShardingRules) -> NamedSharding:
+    return NamedSharding(rules.mesh, logical_to_pspec(axes, rules))
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names; no-op w/o rules.
+
+    Divisibility guard: a dim that the mapped mesh axes do not evenly divide
+    is left unsharded (avoids GSPMD padding surprises, e.g. batch=1 decode).
+    """
+    rules = active_rules()
+    if rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"{len(axes)} axes for rank-{x.ndim} array")
+    parts = []
+    for dim, name in zip(x.shape, axes):
+        phys = rules.table.get(name) if name is not None else None
+        if phys is not None:
+            n = rules.axis_size(name)
+            if n <= 1 or dim % n != 0:
+                phys = None
+        parts.append(phys)
+    # dedup mesh axes: rightmost dim wins (feature/TP dims sit rightmost —
+    # e.g. [B, S(act_seq->model), ff(->model)] resolves to ff-sharded, the
+    # Megatron-SP convention: gather seq, compute TP-sharded hidden)
+    used: set = set()
+    for i in range(len(parts) - 1, -1, -1):
+        phys = parts[i]
+        if phys is None:
+            continue
+        names = (phys,) if isinstance(phys, str) else tuple(phys)
+        if any(a in used for a in names):
+            parts[i] = None
+        else:
+            used.update(names)
+    while parts and parts[-1] is None:
+        parts.pop()
+    spec = P(*parts)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,238 @@
+"""Operator-level workloads for TPU-EM analyses.
+
+Two families:
+
+* The paper's own CNN-era benchmark models (Table 1 / Figs 5-9):
+  MobileNet v2 (224), ResNet50 (224), Tiny YOLO v2 (416) as explicit op
+  lists built from their public layer specs. Variants: ``_C`` (DMA
+  compression), ``_S`` (sparsity acceleration), ``_SC`` (both) — matching
+  the paper's accuracy-characterization grid.
+
+* LM-family workloads derived from an ``ArchConfig`` (per-device op list
+  for one layer stack step) — used to cross-check the HLO-extracted task
+  graphs and to run Fig-5-style scaling on modern workloads.
+
+Ops are engine-agnostic records; ``graph.compiler`` maps them to tiles,
+inserts DMA tasks + barriers, and applies variant effects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..configs.base import ArchConfig
+
+__all__ = ["Op", "mobilenet_v2", "resnet50", "tiny_yolo_v2", "WORKLOADS",
+           "lm_layer_ops", "workload_flops", "workload_bytes"]
+
+
+@dataclass(frozen=True)
+class Op:
+    name: str
+    kind: str              # conv | dwconv | matmul | pool | eltwise | act |
+    #                        softmax | global_pool
+    # GEMM view (conv is im2col'd): out[M,N] = in[M,K] @ w[K,N]
+    m: int = 0
+    n: int = 0
+    k: int = 0
+    # element counts for vector ops
+    elems: float = 0.0
+    vec_kind: str = "generic"
+    # tensor footprints (bytes, at dtype_bytes=1 int8 unless overridden)
+    in_bytes: float = 0.0
+    out_bytes: float = 0.0
+    w_bytes: float = 0.0
+    sparsity: float = 0.0  # fraction of MACs skippable by sparsity HW
+
+    @property
+    def flops(self) -> float:
+        if self.kind in ("conv", "matmul"):
+            return 2.0 * self.m * self.n * self.k
+        return self.elems
+
+
+def _conv(name, hw_in, cin, cout, k, stride=1, act_sparsity=0.35) -> Op:
+    ho = hw_in // stride
+    m = ho * ho
+    kk = k * k * cin
+    return Op(name=name, kind="conv", m=m, n=cout, k=kk,
+              in_bytes=hw_in * hw_in * cin, out_bytes=ho * ho * cout,
+              w_bytes=k * k * cin * cout, sparsity=act_sparsity)
+
+
+def _dwconv(name, hw_in, c, k, stride=1) -> Op:
+    ho = hw_in // stride
+    return Op(name=name, kind="dwconv", elems=ho * ho * c * k * k,
+              vec_kind="mul",
+              in_bytes=hw_in * hw_in * c, out_bytes=ho * ho * c,
+              w_bytes=k * k * c)
+
+
+def _pool(name, hw_in, c, k=2, stride=2) -> Op:
+    ho = hw_in // stride
+    return Op(name=name, kind="pool", elems=ho * ho * c * k * k,
+              vec_kind="reduce",
+              in_bytes=hw_in * hw_in * c, out_bytes=ho * ho * c)
+
+
+def _eltwise(name, hw, c) -> Op:
+    return Op(name=name, kind="eltwise", elems=hw * hw * c, vec_kind="add",
+              in_bytes=2 * hw * hw * c, out_bytes=hw * hw * c)
+
+
+def _fc(name, cin, cout) -> Op:
+    return Op(name=name, kind="matmul", m=1, n=cout, k=cin,
+              in_bytes=cin, out_bytes=cout, w_bytes=cin * cout)
+
+
+def mobilenet_v2(res: int = 224) -> List[Op]:
+    ops: List[Op] = [_conv("stem", res, 3, 32, 3, 2)]
+    hw = res // 2
+    cin = 32
+    # (expansion t, out channels c, repeats n, stride s) — the public config
+    stages = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+              (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    bi = 0
+    for t, c, n, s in stages:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            hidden = cin * t
+            pre = f"b{bi}"
+            if t != 1:
+                ops.append(_conv(f"{pre}.expand", hw, cin, hidden, 1))
+            ops.append(_dwconv(f"{pre}.dw", hw, hidden, 3, stride))
+            hw2 = hw // stride
+            ops.append(_conv(f"{pre}.project", hw2, hidden, c, 1))
+            if stride == 1 and cin == c:
+                ops.append(_eltwise(f"{pre}.res", hw2, c))
+            hw, cin = hw2, c
+            bi += 1
+    ops.append(_conv("head", hw, cin, 1280, 1))
+    ops.append(Op("gap", "global_pool", elems=hw * hw * 1280,
+                  vec_kind="reduce", in_bytes=hw * hw * 1280,
+                  out_bytes=1280))
+    ops.append(_fc("fc", 1280, 1000))
+    return ops
+
+
+def resnet50(res: int = 224) -> List[Op]:
+    ops: List[Op] = [_conv("stem", res, 3, 64, 7, 2),
+                     _pool("stem.pool", res // 2, 64, 3, 2)]
+    hw = res // 4
+    cin = 64
+    stages = [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)]
+    bi = 0
+    for width, n, s in stages:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            pre = f"b{bi}"
+            ops.append(_conv(f"{pre}.c1", hw, cin, width, 1))
+            hw2 = hw // stride
+            ops.append(_conv(f"{pre}.c2", hw, width, width, 3, stride))
+            ops.append(_conv(f"{pre}.c3", hw2, width, width * 4, 1))
+            if i == 0:
+                ops.append(_conv(f"{pre}.down", hw, cin, width * 4, 1,
+                                 stride))
+            ops.append(_eltwise(f"{pre}.res", hw2, width * 4))
+            hw, cin = hw2, width * 4
+            bi += 1
+    ops.append(Op("gap", "global_pool", elems=hw * hw * cin,
+                  vec_kind="reduce", in_bytes=hw * hw * cin, out_bytes=cin))
+    ops.append(_fc("fc", cin, 1000))
+    return ops
+
+
+def tiny_yolo_v2(res: int = 416) -> List[Op]:
+    ops: List[Op] = []
+    hw = res
+    cin = 3
+    for i, c in enumerate([16, 32, 64, 128, 256, 512]):
+        ops.append(_conv(f"c{i}", hw, cin, c, 3))
+        stride = 2 if i < 5 else 1
+        if i < 5:
+            ops.append(_pool(f"p{i}", hw, c, 2, 2))
+            hw //= 2
+        else:
+            ops.append(_pool(f"p{i}", hw, c, 2, 1))
+        cin = c
+    ops.append(_conv("c6", hw, cin, 1024, 3))
+    ops.append(_conv("c7", hw, 1024, 1024, 3))
+    ops.append(_conv("out", hw, 1024, 125, 1))
+    return ops
+
+
+WORKLOADS = {
+    "mobilenet_v2": mobilenet_v2,
+    "resnet50": resnet50,
+    "tiny_yolo_v2": tiny_yolo_v2,
+}
+
+
+def lm_layer_ops(cfg: ArchConfig, *, seq: int, batch: int,
+                 dtype_bytes: int = 2, tp_shards: int = 1) -> List[Op]:
+    """Per-device op list for ONE transformer layer (forward): qkv/attn/out
+    + FFN or MoE. TP sharding divides head and ff dims."""
+    d = cfg.d_model
+    H = max(cfg.n_heads // tp_shards, 1)
+    KV = max(cfg.n_kv_heads // max(tp_shards, 1), 1)
+    hd = cfg.hd
+    T = seq * batch
+    ops = [
+        Op("qkv", "matmul", m=T, n=(H + 2 * KV) * hd, k=d,
+           in_bytes=T * d * dtype_bytes,
+           out_bytes=T * (H + 2 * KV) * hd * dtype_bytes,
+           w_bytes=d * (H + 2 * KV) * hd * dtype_bytes),
+        Op("scores", "matmul", m=T * H, n=seq, k=hd,
+           in_bytes=2 * T * H * hd * dtype_bytes,
+           out_bytes=T * H * seq * 4),
+        Op("softmax", "softmax", elems=T * H * seq, vec_kind="softmax",
+           in_bytes=T * H * seq * 4, out_bytes=T * H * seq * dtype_bytes),
+        Op("pv", "matmul", m=T * H, n=hd, k=seq,
+           in_bytes=T * H * seq * dtype_bytes,
+           out_bytes=T * H * hd * dtype_bytes),
+        Op("attn_out", "matmul", m=T, n=d, k=H * hd,
+           in_bytes=T * H * hd * dtype_bytes, out_bytes=T * d * dtype_bytes,
+           w_bytes=H * hd * d * dtype_bytes),
+    ]
+    if cfg.is_moe:
+        E_local = max(cfg.n_experts // tp_shards, 1)
+        cap = int(T * cfg.experts_per_token / cfg.n_experts * 1.25) + 1
+        f = cfg.d_ff
+        ops += [
+            Op("router", "matmul", m=T, n=cfg.n_experts, k=d,
+               in_bytes=T * d * dtype_bytes, out_bytes=T * cfg.n_experts * 4,
+               w_bytes=d * cfg.n_experts * dtype_bytes),
+            Op("experts_up", "matmul", m=E_local * cap, n=2 * f, k=d,
+               in_bytes=E_local * cap * d * dtype_bytes,
+               out_bytes=E_local * cap * 2 * f * dtype_bytes,
+               w_bytes=E_local * 2 * d * f * dtype_bytes),
+            Op("experts_down", "matmul", m=E_local * cap, n=d, k=f,
+               in_bytes=E_local * cap * f * dtype_bytes,
+               out_bytes=E_local * cap * d * dtype_bytes,
+               w_bytes=E_local * f * d * dtype_bytes),
+        ]
+    elif cfg.d_ff:
+        f = cfg.d_ff // max(tp_shards, 1)
+        ops += [
+            Op("ffn_up", "matmul", m=T, n=2 * f, k=d,
+               in_bytes=T * d * dtype_bytes, out_bytes=T * 2 * f * dtype_bytes,
+               w_bytes=2 * d * f * dtype_bytes),
+            Op("silu", "act", elems=T * f, vec_kind="sigmoid",
+               in_bytes=T * 2 * f * dtype_bytes,
+               out_bytes=T * f * dtype_bytes),
+            Op("ffn_down", "matmul", m=T, n=d, k=f,
+               in_bytes=T * f * dtype_bytes, out_bytes=T * d * dtype_bytes,
+               w_bytes=f * d * dtype_bytes),
+        ]
+    ops.append(Op("norms", "eltwise", elems=2 * T * d, vec_kind="rsqrt",
+                  in_bytes=T * d * dtype_bytes, out_bytes=T * d * dtype_bytes))
+    return ops
+
+
+def workload_flops(ops: List[Op]) -> float:
+    return sum(o.flops for o in ops)
+
+
+def workload_bytes(ops: List[Op]) -> float:
+    return sum(o.in_bytes + o.out_bytes + o.w_bytes for o in ops)

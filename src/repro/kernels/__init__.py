@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf hot-spots the dry-run artifacts expose.
+
+flash_attention — online-softmax attention; removes the dominant HBM
+    score traffic of the jnp path (memory-roofline win for train/prefill).
+rmsnorm — fused norm (one HBM round trip).
+ssm_scan — chunked diagonal linear recurrence (Mamba/mLSTM core), carried
+    through VMEM scratch across the sequential time grid.
+
+Kernels target TPU (pl.pallas_call + BlockSpec); CPU validation runs them
+in interpret mode against the ref.py oracles (tests/test_kernels.py sweeps
+shapes and dtypes).
+"""
+from .flash_attention.ops import flash_mha
+from .rmsnorm.kernel import fused_rmsnorm
+from .ssm_scan.ops import ssm_scan_batched
+
+__all__ = ["flash_mha", "fused_rmsnorm", "ssm_scan_batched"]

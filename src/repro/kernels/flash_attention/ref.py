@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, n_q_heads_per_kv: int = 1, causal: bool = True,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q [BH, Sq, hd], k/v [BKV, Sk, hd] -> [BH, Sq, hd] (f32 math)."""
+    BH, Sq, hd = q.shape
+    BKV, Sk, _ = k.shape
+    G = n_q_heads_per_kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kk = jnp.repeat(k, G, axis=0)
+    vv = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, vv.astype(jnp.float32)).astype(
+        q.dtype)

@@ -1,0 +1,45 @@
+"""Fused RMSNorm Pallas kernel: one HBM round-trip instead of three.
+
+The jnp path (square -> mean -> rsqrt -> scale) leaves 3-4 materialized
+intermediates at [rows, d]; fused, the row block stays in VMEM. Row blocks
+x full feature dim (d is at most 8192 = 32 KiB/row at f32 — comfortably
+VMEM-resident at block_rows=256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm_kernel", "fused_rmsnorm"]
+
+
+def rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def fused_rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+                  block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    grid = (-(-rows // br),)
+    out = pl.pallas_call(
+        functools.partial(rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out.reshape(orig_shape)

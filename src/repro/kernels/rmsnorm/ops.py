@@ -1,0 +1,13 @@
+"""Jit'd wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import fused_rmsnorm
+
+__all__ = ["rmsnorm"]
+
+rmsnorm = jax.jit(functools.partial(fused_rmsnorm),
+                  static_argnames=("eps", "block_rows", "interpret"))

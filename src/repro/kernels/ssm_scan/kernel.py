@@ -1,0 +1,62 @@
+"""Chunked diagonal-SSM scan Pallas kernel.
+
+Computes h_t = a_t * h_{t-1} + b_t along time for [S, C] channel-diagonal
+state (the Mamba/mLSTM-style recurrence core). The grid is
+(channel blocks, time blocks) with time minor-most: TPU executes the grid
+sequentially, so a VMEM scratch row carries the running state across time
+blocks while each block's work is fully vectorized over channels — the
+VMEM-resident re-blocking of a GPU-style scan kernel (no warp shuffles on
+TPU; the systolic/vector units want [time x channel] tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan_kernel", "ssm_scan"]
+
+
+def ssm_scan_kernel(a_ref, b_ref, o_ref, h_ref, *, block_t: int):
+    jt = pl.program_id(1)
+
+    @pl.when(jt == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)        # [bt, bc]
+    b = b_ref[...].astype(jnp.float32)
+    h0 = h_ref[...]                            # [bc]
+
+    # within-block scan (sequential over bt, vectorized over channels);
+    # bt is small (e.g. 128) so the loop unrolls into vector ops
+    def step(h, ab):
+        at, bt_ = ab
+        h = at * h + bt_
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (a, b))
+    o_ref[...] = hs.astype(o_ref.dtype)
+    h_ref[...] = hT
+
+
+def ssm_scan(a: jax.Array, b: jax.Array, *, block_t: int = 128,
+             block_c: int = 512, interpret: bool = True) -> jax.Array:
+    """a, b [S, C] -> h [S, C] with h_t = a_t*h_{t-1} + b_t (h_{-1} = 0)."""
+    S, C = a.shape
+    bt = min(block_t, S)
+    bc = min(block_c, C)
+    grid = (-(-C // bc), -(-S // bt))
+    return pl.pallas_call(
+        functools.partial(ssm_scan_kernel, block_t=bt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, bc), lambda jc, jt: (jt, jc)),
+                  pl.BlockSpec((bt, bc), lambda jc, jt: (jt, jc))],
+        out_specs=pl.BlockSpec((bt, bc), lambda jc, jt: (jt, jc)),
+        out_shape=jax.ShapeDtypeStruct((S, C), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bc,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

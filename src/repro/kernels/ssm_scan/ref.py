@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the SSM scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssm_scan_ref"]
+
+
+def ssm_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t over axis 0; h_{-1} = 0."""
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=0)
+    return h.astype(a.dtype)

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) cell: build the production
+program, ``.lower().compile()`` it against ShapeDtypeStruct stand-ins (no
+allocation), print ``memory_analysis()`` / ``cost_analysis()``, and write a
+JSON artifact (+ gzip'd optimized HLO) that the roofline analysis and the
+TPU-EM simulator ingest.
+
+The first two lines above MUST run before any jax import: jax locks the
+device count on first initialization, and this driver needs 512 host
+placeholder devices to build the 2x16x16 production mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out benchmarks/artifacts/dryrun
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from ..configs import REGISTRY, SHAPES, get_config, get_shape, skip_reason
+from .mesh import make_production_mesh
+from .programs import build_program
+
+__all__ = ["run_cell", "main"]
+
+
+def _mem_dict(compiled) -> Dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(m)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None, save_hlo: bool = True,
+             verbose: bool = True, **program_kw) -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_tag,
+            "program": shape.program, "devices": 512 if multi_pod else 256}
+
+    reason = skip_reason(cfg, shape)
+    if reason:
+        cell.update(status="skip", skip_reason=reason)
+        _write(cell, out_dir)
+        if verbose:
+            print(f"[skip] {cfg.name} x {shape.name} x {mesh_tag}: {reason}")
+        return cell
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        prog = build_program(cfg, shape, mesh, **program_kw)
+        lowered = prog.lower()
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        cost = {k: float(v) for k, v in (compiled.cost_analysis() or {}).items()
+                if isinstance(v, (int, float))}
+        mem = _mem_dict(compiled)
+        cell.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            cost_analysis=cost,
+            memory_analysis=mem,
+            param_count=cfg.param_count(),
+            active_param_count=cfg.active_param_count(),
+        )
+        if verbose:
+            print(f"[ok]   {cfg.name} x {shape.name} x {mesh_tag} "
+                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+            print(f"       memory_analysis: {mem}")
+            fl = cost.get("flops", 0.0)
+            print(f"       cost_analysis: flops={fl:.3e} "
+                  f"bytes={cost.get('bytes accessed', 0.0):.3e}")
+        if save_hlo and out_dir:
+            hlo = compiled.as_text()
+            path = os.path.join(
+                out_dir, f"{cfg.name}__{shape.name}__{mesh_tag}.hlo.txt.gz")
+            os.makedirs(out_dir, exist_ok=True)
+            with gzip.open(path, "wt") as f:
+                f.write(hlo)
+            cell["hlo_file"] = os.path.basename(path)
+    except Exception as e:
+        cell.update(status="fail", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[FAIL] {cfg.name} x {shape.name} x {mesh_tag}: "
+                  f"{type(e).__name__}: {e}")
+    _write(cell, out_dir)
+    return cell
+
+
+def _write(cell: Dict, out_dir: Optional[str]):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{cell['arch']}__{cell['shape']}__{cell['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(cell, f, indent=1)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    p.add_argument("--no-hlo", action="store_true")
+    p.add_argument("--skip-existing", action="store_true")
+    p.add_argument("--remat-policy", default="full",
+                   choices=["full", "save-attn"],
+                   help="activation-checkpoint policy (perf iterations)")
+    p.add_argument("--microbatches", type=int, default=1)
+    args = p.parse_args(argv)
+    program_kw = {}
+    if args.remat_policy != "full":
+        program_kw["model_kw"] = {"remat_policy": args.remat_policy}
+    if args.microbatches > 1:
+        program_kw["microbatches"] = args.microbatches
+
+    archs = list(REGISTRY) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = "pod2x16x16" if multi else "pod16x16"
+                if args.skip_existing:
+                    f = os.path.join(args.out,
+                                     f"{arch}__{shape}__{tag}.json")
+                    if os.path.exists(f):
+                        prev = json.load(open(f))
+                        if prev.get("status") in ("ok", "skip"):
+                            print(f"[cached] {arch} x {shape} x {tag}: "
+                                  f"{prev['status']}")
+                            results.append(prev)
+                            continue
+                results.append(run_cell(arch, shape, multi, args.out,
+                                        save_hlo=not args.no_hlo,
+                                        **program_kw))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\n=== dry-run summary: {n_ok} ok, {n_skip} structural skips, "
+          f"{n_fail} FAILED of {len(results)} cells ===")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

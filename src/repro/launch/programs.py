@@ -1,0 +1,172 @@
+"""Shared program builder: (arch x shape x mesh) -> jit-able program.
+
+Used by the dry-run driver (lower+compile only), the real train/serve
+drivers (same program, real data), and the benchmarks. One construction
+path means the dry-run provably exercises the deployed program.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..distributed.sharding import ShardingRules, rules_for
+from ..models.layers import abstract_params, param_pspecs
+from ..models.model import Model, build_model
+from ..serve.engine import make_decode_fn, make_prefill_fn
+from ..train.loop import abstract_state, batch_pspecs, make_train_step, \
+    state_pspecs
+
+__all__ = ["Program", "build_program", "rules_for_arch"]
+
+
+@dataclass
+class Program:
+    name: str
+    fn: Callable
+    abstract_args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    model: Model
+    rules: ShardingRules
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.abstract_args)
+
+
+def rules_for_arch(cfg: ArchConfig, mesh: Mesh, *,
+                   serving: bool = False) -> ShardingRules:
+    fsdp = True
+    if serving:
+        # serving memory planner: replicate weights over 'data' (kills the
+        # per-layer FSDP all-gathers in each decode step) unless the
+        # TP-sharded parameters alone would crowd HBM
+        msize = dict(mesh.shape).get("model", 1)
+        per_chip_param_bytes = 2.0 * cfg.param_count() / max(msize, 1)
+        fsdp = per_chip_param_bytes > 8e9
+    return rules_for(
+        mesh,
+        n_heads=cfg.n_heads,
+        n_experts=cfg.n_experts,
+        d_ff=cfg.d_ff,
+        moe=cfg.is_moe,
+        fsdp=fsdp,
+    )
+
+
+def _named(tree_pspec, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_pspec,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_program(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh: Mesh,
+    *,
+    microbatches: int = 1,
+    compress: bool = False,
+    remat: bool = True,
+    model_kw: Optional[Dict] = None,
+) -> Program:
+    rules = rules_for_arch(cfg, mesh, serving=shape.kind != "train")
+    model = build_model(cfg, remat=remat, **(model_kw or {}))
+    batch_abs = abstract_params(model.batch_template(shape))
+    batch_ps = batch_pspecs(model, shape, rules)
+
+    if shape.kind == "train":
+        fn = make_train_step(model, rules, microbatches=microbatches,
+                             compress=compress)
+        st_abs = abstract_state(model, compress=compress)
+        st_ps = state_pspecs(model, rules, compress=compress)
+        metrics_ps = {"loss": P(), "grad_norm": P(), "lr": P()}
+        return Program(
+            name=f"train_step[{cfg.name}/{shape.name}]",
+            fn=fn,
+            abstract_args=(st_abs, batch_abs),
+            in_shardings=(_named(st_ps, mesh), _named(batch_ps, mesh)),
+            out_shardings=(_named(st_ps, mesh), _named(metrics_ps, mesh)),
+            donate_argnums=(0,),
+            model=model,
+            rules=rules,
+        )
+
+    if shape.kind == "prefill":
+        smax = shape.seq_len
+        fn = make_prefill_fn(model, rules, smax)
+        params_abs = model.abstract()
+        params_ps = model.pspecs(rules)
+        if cfg.encoder_only:
+            # encoder "prefill" = full forward; no cache exists
+            def enc_fn(params, batch):
+                from ..distributed.sharding import use_rules
+                with use_rules(rules):
+                    h = model.forward(params, batch, for_train=False)
+                    return h
+
+            return Program(
+                name=f"encode[{cfg.name}/{shape.name}]",
+                fn=enc_fn,
+                abstract_args=(params_abs, batch_abs),
+                in_shardings=(_named(params_ps, mesh), _named(batch_ps, mesh)),
+                out_shardings=None,
+                donate_argnums=(),
+                model=model,
+                rules=rules,
+            )
+        cache_ps = model.cache_pspecs(shape.global_batch, smax, rules)
+        logits_ps = P(rules.table.get("batch"), rules.table.get("vocab"))
+        return Program(
+            name=f"prefill[{cfg.name}/{shape.name}]",
+            fn=fn,
+            abstract_args=(params_abs, batch_abs),
+            in_shardings=(_named(params_ps, mesh), _named(batch_ps, mesh)),
+            out_shardings=(NamedSharding(mesh, logits_ps),
+                           _named(cache_ps, mesh)),
+            donate_argnums=(),
+            model=model,
+            rules=rules,
+        )
+
+    # decode: one token against a cache of capacity seq_len
+    smax = shape.seq_len
+    B = shape.global_batch
+    fn = make_decode_fn(model, rules)
+    params_abs = model.abstract()
+    params_ps = model.pspecs(rules)
+    cache_abs = model.abstract_cache(B, smax)
+    cache_ps = model.cache_pspecs(B, smax, rules)
+    batch_guard = rules.table.get("batch")
+    if batch_guard is not None:
+        n = rules.axis_size("batch")
+        if B % max(n, 1) != 0:
+            batch_guard = None
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(batch_guard, None))
+    logits_sh = NamedSharding(mesh, P(batch_guard, rules.table.get("vocab")))
+    return Program(
+        name=f"decode[{cfg.name}/{shape.name}]",
+        fn=fn,
+        abstract_args=(params_abs, cache_abs, tok_abs),
+        in_shardings=(_named(params_ps, mesh), _named(cache_ps, mesh), tok_sh),
+        out_shardings=(logits_sh, _named(cache_ps, mesh)),
+        donate_argnums=(1,),
+        model=model,
+        rules=rules,
+    )

@@ -1,0 +1,668 @@
+"""Layer blocks: parameter templates + train/prefill/decode forward paths.
+
+Each block *kind* is a ``Block`` record with four functions sharing one
+numeric core, so the smoke tests (train path) validate the same math the
+serving paths use:
+
+  template(cfg)                   -> pytree of PT
+  apply(cfg, p, x, ctx)           -> x                     (train / no-cache)
+  prefill(cfg, p, x, ctx)         -> (x, cache_slice)
+  decode(cfg, p, x, cache, ctx)   -> (x, new_cache_slice)
+  cache_template(cfg, B, ctx)     -> pytree of PT (cache shapes/axes/dtypes)
+
+Blocks are assembled into models by ``model.py`` as *segments* (scanned
+stacks of identical blocks, or single unrolled blocks where the arch is
+non-uniform: Hymba's 3 global-attention layers, xLSTM's sLSTM positions).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import constrain
+from .attention import attention, cross_attention, decode_attention, sink_banded_attention
+from .layers import PT, apply_rope, rms_norm, swiglu
+from .mamba import MambaState, mamba_decode_mix, mamba_mix
+from .moe import moe_ffn
+from .ssm import (
+    mlstm_chunked,
+    mlstm_decode_step,
+    slstm_decode_step,
+    slstm_scan,
+)
+
+__all__ = ["Block", "BlockCtx", "BLOCKS", "stackify", "rope_at"]
+
+
+@dataclass(frozen=True)
+class BlockCtx:
+    """Per-segment static + per-call dynamic context."""
+
+    rope: Optional[Tuple[jax.Array, jax.Array]] = None  # cos/sin [S, hd/2]
+    window: int = 0            # 0 = full attention
+    n_sink: int = 0            # always-attended prefix (Hymba meta tokens)
+    causal: bool = True
+    img: Optional[jax.Array] = None     # [B, I, d] image embeddings (VLM)
+    pos: Optional[jax.Array] = None     # scalar int32 decode position
+    smax: int = 0              # cache capacity (decode)
+    q_chunk: int = 512
+
+
+@dataclass(frozen=True)
+class Block:
+    kind: str
+    template: Callable[[ArchConfig], Any]
+    apply: Callable[..., jax.Array]
+    prefill: Callable[..., Tuple[jax.Array, Any]]
+    decode: Callable[..., Tuple[jax.Array, Any]]
+    cache_template: Callable[[ArchConfig, int, BlockCtx], Any]
+
+
+def stackify(tmpl, n: int):
+    """Add a leading 'stack' dim of size n to every PT in a template tree."""
+    return jax.tree_util.tree_map(
+        lambda t: replace(t, shape=(n,) + t.shape, axes=("stack",) + t.axes),
+        tmpl,
+        is_leaf=lambda x: isinstance(x, PT),
+    )
+
+
+def rope_at(pos: jax.Array, head_dim: int, theta: float):
+    """cos/sin [1, hd/2] at a single (traced) position."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32) * freqs
+    return jnp.cos(ang)[None], jnp.sin(ang)[None]
+
+
+def _res_scale(cfg: ArchConfig) -> float:
+    # MiniCPM depth-scaled residuals: scale_depth / sqrt(n_layers).
+    return cfg.scale_depth / math.sqrt(cfg.n_layers) if cfg.scale_depth > 0 else 1.0
+
+
+# ---------------------------------------------------------------------------
+# attention (+ dense-FFN / MoE-FFN) block — dense, moe, encoder families
+# ---------------------------------------------------------------------------
+
+def _attn_template(cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p: Dict[str, Any] = {
+        "ln1": PT((d,), (None,), init="ones"),
+        "wq": PT((d, H, hd), ("embed", "heads", None), fan_in=d),
+        "wk": PT((d, KV, hd), ("embed", "kv_heads", None), fan_in=d),
+        "wv": PT((d, KV, hd), ("embed", "kv_heads", None), fan_in=d),
+        "wo": PT((H, hd, d), ("heads", None, "embed"), fan_in=H * hd),
+        "ln2": PT((d,), (None,), init="ones"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PT((H, hd), ("heads", None), init="zeros")
+        p["bk"] = PT((KV, hd), ("kv_heads", None), init="zeros")
+        p["bv"] = PT((KV, hd), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = PT((hd,), (None,), init="ones")
+        p["k_norm"] = PT((hd,), (None,), init="ones")
+    if cfg.is_moe:
+        E, f = cfg.n_experts, cfg.d_ff
+        p["router"] = PT((d, E), ("embed", None))
+        p["we_gate"] = PT((E, d, f), ("expert", "embed", None))
+        p["we_up"] = PT((E, d, f), ("expert", "embed", None))
+        p["we_down"] = PT((E, f, d), ("expert", None, "embed"))
+    else:
+        f = cfg.d_ff
+        p["wg"] = PT((d, f), ("embed", "ff"))
+        p["wi"] = PT((d, f), ("embed", "ff"))
+        p["wo2"] = PT((f, d), ("ff", "embed"))
+    return p
+
+
+def _qkv(cfg: ArchConfig, p, h, rope):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "act_seq", "heads", None)
+    return q, k, v
+
+
+def _ffn(cfg: ArchConfig, p, x, res):
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    h2 = constrain(h2, "batch", "act_seq", None)
+    if cfg.is_moe:
+        f = moe_ffn(
+            h2, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+            k=cfg.experts_per_token, n_experts=cfg.n_experts,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        f = swiglu(h2, p["wg"], p["wi"], p["wo2"])
+    x = x + f * res
+    return constrain(x, "batch", "act_seq", None)
+
+
+def _attn_apply(cfg: ArchConfig, p, x, ctx: BlockCtx) -> jax.Array:
+    res = _res_scale(cfg)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = constrain(h, "batch", "act_seq", None)
+    q, k, v = _qkv(cfg, p, h, ctx.rope)
+    if ctx.window > 0 and ctx.n_sink > 0:
+        o = sink_banded_attention(q, k, v, window=ctx.window,
+                                  n_sink=ctx.n_sink, q_chunk=ctx.q_chunk)
+    else:
+        o = attention(q, k, v, causal=ctx.causal, window=ctx.window,
+                      q_chunk=ctx.q_chunk)
+    # named for selective remat: policy 'save-attn' keeps this [B,S,H,hd]
+    # tensor so backward never re-runs the O(S^2) score pipeline
+    from jax.ad_checkpoint import checkpoint_name
+    o = checkpoint_name(o, "attn_out")
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    x = x + o * res
+    return _ffn(cfg, p, x, res)
+
+
+def _attn_cache_len(cfg: ArchConfig, ctx: BlockCtx) -> int:
+    if ctx.window > 0:
+        return ctx.n_sink + ctx.window
+    return ctx.smax
+
+
+def _attn_cache_template(cfg: ArchConfig, B: int, ctx: BlockCtx):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    W = _attn_cache_len(cfg, ctx)
+    seq_ax = "kv_seq" if ctx.window == 0 else None
+    spec = PT((B, W, KV, hd), ("batch", seq_ax, "kv_heads", None), init="zeros")
+    return {"k": spec, "v": spec}
+
+
+def _attn_prefill(cfg: ArchConfig, p, x, ctx: BlockCtx):
+    """Apply + build the cache slice from this layer's K/V."""
+    res = _res_scale(cfg)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = constrain(h, "batch", "act_seq", None)
+    q, k, v = _qkv(cfg, p, h, ctx.rope)
+    if ctx.window > 0 and ctx.n_sink > 0:
+        o = sink_banded_attention(q, k, v, window=ctx.window,
+                                  n_sink=ctx.n_sink, q_chunk=ctx.q_chunk)
+    else:
+        o = attention(q, k, v, causal=ctx.causal, window=ctx.window,
+                      q_chunk=ctx.q_chunk)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    x = _ffn(cfg, p, x + o * res, res)
+    _, cache = _pack_attn_cache(cfg, k, v, ctx)
+    seq_ax = "kv_seq" if ctx.window == 0 else None
+    cache = {
+        "k": constrain(cache["k"], "batch", seq_ax, "kv_heads", None),
+        "v": constrain(cache["v"], "batch", seq_ax, "kv_heads", None),
+    }
+    return x, cache
+
+
+def _attn_decode(cfg: ArchConfig, p, x, cache, ctx: BlockCtx):
+    """x [B,1,d]; cache {k,v [B,W,KV,hd]}; ctx.pos = absolute position."""
+    res = _res_scale(cfg)
+    pos = ctx.pos
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    rope = rope_at(pos, cfg.hd, cfg.rope_theta) if ctx.rope is not None else None
+    q, k, v = _qkv(cfg, p, h, rope)
+    # decode shards the CACHE over 'model' (flash-decoding); q must keep
+    # heads replicated or GSPMD all-gathers the cache slice every layer
+    q = constrain(q, "batch", None, None, None)
+    W = cache["k"].shape[1]
+    if ctx.window == 0:
+        slot = pos
+        valid = jnp.arange(W) <= pos
+    else:
+        ns = ctx.n_sink
+        slot = jnp.where(pos < ns, pos, ns + (pos - ns) % ctx.window)
+        valid = (jnp.arange(W) <= pos) | (pos >= W)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    o = decode_attention(q, ck, cv, valid)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    x = x + o * res
+    x = _ffn_decode(cfg, p, x, res)
+    return x, {"k": ck, "v": cv}
+
+
+def _ffn_decode(cfg: ArchConfig, p, x, res):
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        f = moe_ffn(
+            h2, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+            k=cfg.experts_per_token, n_experts=cfg.n_experts,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        f = swiglu(h2, p["wg"], p["wi"], p["wo2"])
+    return x + f * res
+
+
+ATTN_BLOCK = Block(
+    kind="attn",
+    template=_attn_template,
+    apply=_attn_apply,
+    prefill=_attn_prefill,
+    decode=_attn_decode,
+    cache_template=_attn_cache_template,
+)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention block (Llama-3.2-Vision): q from text, kv from image tokens
+# ---------------------------------------------------------------------------
+
+def _cross_template(cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, KV, hd, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+    return {
+        "ln1": PT((d,), (None,), init="ones"),
+        "wq": PT((d, H, hd), ("embed", "heads", None), fan_in=d),
+        "wk": PT((d, KV, hd), ("embed", "kv_heads", None), fan_in=d),
+        "wv": PT((d, KV, hd), ("embed", "kv_heads", None), fan_in=d),
+        "wo": PT((H, hd, d), ("heads", None, "embed"), fan_in=H * hd),
+        "q_norm": PT((hd,), (None,), init="ones"),
+        "k_norm": PT((hd,), (None,), init="ones"),
+        "gate_attn": PT((), (), init="zeros"),
+        "ln2": PT((d,), (None,), init="ones"),
+        "wg": PT((d, f), ("embed", "ff")),
+        "wi": PT((d, f), ("embed", "ff")),
+        "wo2": PT((f, d), ("ff", "embed")),
+        "gate_ffn": PT((), (), init="zeros"),
+    }
+
+
+def _img_kv(p, img, eps):
+    k = jnp.einsum("bid,dkh->bikh", img, p["wk"])
+    v = jnp.einsum("bid,dkh->bikh", img, p["wv"])
+    k = rms_norm(k, p["k_norm"], eps)
+    return k, v
+
+
+def _cross_core(cfg, p, x, k_img, v_img):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = constrain(q, "batch", "act_seq", "heads", None)
+    o = cross_attention(q, k_img, v_img)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    x = x + jnp.tanh(p["gate_attn"]) * o
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f = swiglu(h2, p["wg"], p["wi"], p["wo2"])
+    x = x + jnp.tanh(p["gate_ffn"]) * f
+    return constrain(x, "batch", "act_seq", None)
+
+
+def _cross_apply(cfg, p, x, ctx: BlockCtx):
+    k_img, v_img = _img_kv(p, ctx.img, cfg.norm_eps)
+    return _cross_core(cfg, p, x, k_img, v_img)
+
+
+def _cross_prefill(cfg, p, x, ctx: BlockCtx):
+    k_img, v_img = _img_kv(p, ctx.img, cfg.norm_eps)
+    return _cross_core(cfg, p, x, k_img, v_img), {"k": k_img, "v": v_img}
+
+
+def _cross_decode(cfg, p, x, cache, ctx: BlockCtx):
+    return _cross_core(cfg, p, x, cache["k"], cache["v"]), cache
+
+
+def _cross_cache_template(cfg: ArchConfig, B: int, ctx: BlockCtx):
+    KV, hd, I = cfg.n_kv_heads, cfg.hd, cfg.n_image_tokens
+    spec = PT((B, I, KV, hd), ("batch", None, "kv_heads", None), init="zeros")
+    return {"k": spec, "v": spec}
+
+
+CROSS_BLOCK = Block(
+    kind="cross",
+    template=_cross_template,
+    apply=_cross_apply,
+    prefill=_cross_prefill,
+    decode=_cross_decode,
+    cache_template=_cross_cache_template,
+)
+
+
+# ---------------------------------------------------------------------------
+# hybrid block (Hymba): parallel attention + Mamba heads on the same input,
+# outputs normalized and fused, then dense FFN.
+# ---------------------------------------------------------------------------
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return max(1, -(-cfg.d_model // 16))
+
+
+def _hybrid_template(cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, KV, hd, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+    di = cfg.ssm_expand * d
+    n, K, dtr = cfg.ssm_state, cfg.ssm_conv, _dt_rank(cfg)
+    return {
+        "ln1": PT((d,), (None,), init="ones"),
+        # attention branch
+        "wq": PT((d, H, hd), ("embed", "heads", None), fan_in=d),
+        "wk": PT((d, KV, hd), ("embed", "kv_heads", None), fan_in=d),
+        "wv": PT((d, KV, hd), ("embed", "kv_heads", None), fan_in=d),
+        "wo": PT((H, hd, d), ("heads", None, "embed"), fan_in=H * hd),
+        "norm_attn": PT((d,), (None,), init="ones"),
+        # mamba branch
+        "w_in": PT((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": PT((di, K), ("ssm_inner", None), init="small"),
+        "w_x": PT((di, dtr + 2 * n), ("ssm_inner", None)),
+        "w_dt": PT((dtr, di), (None, "ssm_inner")),
+        "b_dt": PT((di,), ("ssm_inner",), init="small"),
+        "a_log": PT((di, n), ("ssm_inner", None), init="small"),
+        "d_skip": PT((di,), ("ssm_inner",), init="ones"),
+        "wo_m": PT((di, d), ("ssm_inner", "embed")),
+        "norm_ssm": PT((d,), (None,), init="ones"),
+        # fusion + FFN
+        "ln2": PT((d,), (None,), init="ones"),
+        "wg": PT((d, f), ("embed", "ff")),
+        "wi": PT((d, f), ("embed", "ff")),
+        "wo2": PT((f, d), ("ff", "embed")),
+    }
+
+
+def _hybrid_mamba(cfg, p, h, state=None, return_state=False, decode=False):
+    di = cfg.ssm_expand * cfg.d_model
+    xz = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    xz = constrain(xz, "batch", None, "ssm_inner")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    kw = dict(n_state=cfg.ssm_state, dt_rank=_dt_rank(cfg))
+    if decode:
+        y, st = mamba_decode_mix(
+            x_in, z, p["conv_w"], p["w_x"], p["w_dt"], p["b_dt"],
+            p["a_log"], p["d_skip"], state=state, **kw)
+        out = jnp.einsum("bsd,de->bse", y, p["wo_m"])
+        return out, st
+    if return_state:
+        y, st = mamba_mix(
+            x_in, z, p["conv_w"], p["w_x"], p["w_dt"], p["b_dt"],
+            p["a_log"], p["d_skip"], state=state, return_state=True, **kw)
+        out = jnp.einsum("bsd,de->bse", y, p["wo_m"])
+        return out, st
+    y = mamba_mix(x_in, z, p["conv_w"], p["w_x"], p["w_dt"], p["b_dt"],
+                  p["a_log"], p["d_skip"], state=state, **kw)
+    return jnp.einsum("bsd,de->bse", y, p["wo_m"])
+
+
+def _hybrid_fuse(cfg, p, x, o_attn, o_ssm):
+    fused = 0.5 * (rms_norm(o_attn, p["norm_attn"], cfg.norm_eps)
+                   + rms_norm(o_ssm, p["norm_ssm"], cfg.norm_eps))
+    x = x + fused
+    x = constrain(x, "batch", "act_seq", None)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f = swiglu(h2, p["wg"], p["wi"], p["wo2"])
+    return constrain(x + f, "batch", "act_seq", None)
+
+
+def _hybrid_apply(cfg, p, x, ctx: BlockCtx):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = constrain(h, "batch", "act_seq", None)
+    q, k, v = _qkv(cfg, p, h, ctx.rope)
+    if ctx.window > 0 and ctx.n_sink > 0:
+        o = sink_banded_attention(q, k, v, window=ctx.window,
+                                  n_sink=ctx.n_sink, q_chunk=ctx.q_chunk)
+    else:
+        o = attention(q, k, v, causal=True, window=ctx.window,
+                      q_chunk=ctx.q_chunk)
+    o_attn = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    o_ssm = _hybrid_mamba(cfg, p, h)
+    return _hybrid_fuse(cfg, p, x, o_attn, o_ssm)
+
+
+def _hybrid_cache_template(cfg: ArchConfig, B: int, ctx: BlockCtx):
+    di = cfg.ssm_expand * cfg.d_model
+    c = _attn_cache_template(cfg, B, ctx)
+    c["conv"] = PT((B, di, cfg.ssm_conv - 1), ("batch", "ssm_inner", None),
+                   init="zeros", dtype="float32")
+    c["ssm"] = PT((B, di, cfg.ssm_state), ("batch", "ssm_inner", None),
+                  init="zeros", dtype="float32")
+    return c
+
+
+def _hybrid_prefill(cfg, p, x, ctx: BlockCtx):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = constrain(h, "batch", "act_seq", None)
+    q, k, v = _qkv(cfg, p, h, ctx.rope)
+    if ctx.window > 0 and ctx.n_sink > 0:
+        o = sink_banded_attention(q, k, v, window=ctx.window,
+                                  n_sink=ctx.n_sink, q_chunk=ctx.q_chunk)
+    else:
+        o = attention(q, k, v, causal=True, window=ctx.window,
+                      q_chunk=ctx.q_chunk)
+    o_attn = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    o_ssm, st = _hybrid_mamba(cfg, p, h, return_state=True)
+    xo = _hybrid_fuse(cfg, p, x, o_attn, o_ssm)
+
+    # attention cache (same ring layout as ATTN_BLOCK.prefill)
+    _, attn_cache = _pack_attn_cache(cfg, k, v, ctx)
+    cache = dict(attn_cache)
+    cache["conv"] = st.conv.astype(jnp.float32)
+    cache["ssm"] = st.ssm.astype(jnp.float32)
+    return xo, cache
+
+
+def _pack_attn_cache(cfg, k, v, ctx: BlockCtx):
+    B, S = k.shape[0], k.shape[1]
+    W = _attn_cache_len(cfg, ctx)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    ck = jnp.zeros((B, W, KV, hd), k.dtype)
+    cv = jnp.zeros((B, W, KV, hd), v.dtype)
+    if ctx.window == 0:
+        n = min(S, W)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k[:, :n], 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v[:, :n], 0, axis=1)
+    else:
+        ns = ctx.n_sink
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k[:, :ns], 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v[:, :ns], 0, axis=1)
+        tail = min(ctx.window, S - ns)
+        start = (S - tail - ns) % ctx.window
+        idx = ns + (start + jnp.arange(tail)) % ctx.window
+        ck = ck.at[:, idx].set(k[:, S - tail:])
+        cv = cv.at[:, idx].set(v[:, S - tail:])
+    return None, {"k": ck, "v": cv}
+
+
+def _hybrid_decode(cfg, p, x, cache, ctx: BlockCtx):
+    pos = ctx.pos
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    rope = rope_at(pos, cfg.hd, cfg.rope_theta) if ctx.rope is not None else None
+    q, k, v = _qkv(cfg, p, h, rope)
+    q = constrain(q, "batch", None, None, None)
+    W = cache["k"].shape[1]
+    if ctx.window == 0:
+        slot = pos
+        valid = jnp.arange(W) <= pos
+    else:
+        ns = ctx.n_sink
+        slot = jnp.where(pos < ns, pos, ns + (pos - ns) % ctx.window)
+        valid = (jnp.arange(W) <= pos) | (pos >= W)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    o = decode_attention(q, ck, cv, valid)
+    o_attn = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    st = MambaState(conv=cache["conv"], ssm=cache["ssm"])
+    o_ssm, st = _hybrid_mamba(cfg, p, h, state=st, decode=True)
+    xo = _hybrid_fuse(cfg, p, x, o_attn, o_ssm)
+    return xo, {"k": ck, "v": cv, "conv": st.conv, "ssm": st.ssm}
+
+
+HYBRID_BLOCK = Block(
+    kind="hybrid",
+    template=_hybrid_template,
+    apply=_hybrid_apply,
+    prefill=_hybrid_prefill,
+    decode=_hybrid_decode,
+    cache_template=_hybrid_cache_template,
+)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — cell is the whole layer (no separate FFN)
+# ---------------------------------------------------------------------------
+
+def _mlstm_template(cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "ln": PT((d,), (None,), init="ones"),
+        "wq": PT((d, H, hd), ("embed", "heads", None), fan_in=d),
+        "wk": PT((d, H, hd), ("embed", "heads", None), fan_in=d),
+        "wv": PT((d, H, hd), ("embed", "heads", None), fan_in=d),
+        "w_if": PT((d, H, 2), ("embed", "heads", None), init="small"),
+        "b_if": PT((H, 2), ("heads", None), init="zeros"),
+        "wz": PT((d, d), ("embed", None)),
+        "norm_cell": PT((d,), (None,), init="ones"),
+        "wo": PT((d, d), (None, "embed")),
+    }
+
+
+def _mlstm_io(cfg, p, x):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    h = constrain(h, "batch", "act_seq", None)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    gates = jnp.einsum("bsd,dhg->bshg", h, p["w_if"]) + p["b_if"]
+    z = jnp.einsum("bsd,de->bse", h, p["wz"])
+    return q, k, v, gates[..., 0], gates[..., 1], z
+
+
+def _mlstm_out(cfg, p, x, hc, z):
+    B, S = z.shape[0], z.shape[1]
+    hc = rms_norm(hc.reshape(B, S, cfg.d_model), p["norm_cell"], cfg.norm_eps)
+    out = hc * jax.nn.silu(z.astype(jnp.float32)).astype(hc.dtype)
+    out = jnp.einsum("bsd,de->bse", out, p["wo"])
+    return constrain(x + out, "batch", "act_seq", None)
+
+
+def _mlstm_apply(cfg, p, x, ctx: BlockCtx):
+    q, k, v, ig, fg, z = _mlstm_io(cfg, p, x)
+    hc = mlstm_chunked(q, k, v, ig, fg)
+    return _mlstm_out(cfg, p, x, hc, z)
+
+
+def _mlstm_cache_template(cfg: ArchConfig, B: int, ctx: BlockCtx):
+    H, hd = cfg.n_heads, cfg.hd
+    return {
+        "C": PT((B, H, hd, hd), ("batch", "heads", None, None),
+                init="zeros", dtype="float32"),
+        "n": PT((B, H, hd), ("batch", "heads", None),
+                init="zeros", dtype="float32"),
+        "m": PT((B, H), ("batch", "heads"), init="neg_inf", dtype="float32"),
+    }
+
+
+def _mlstm_prefill(cfg, p, x, ctx: BlockCtx):
+    q, k, v, ig, fg, z = _mlstm_io(cfg, p, x)
+    hc, (C, n, m) = mlstm_chunked(q, k, v, ig, fg, return_state=True)
+    return _mlstm_out(cfg, p, x, hc, z), {"C": C, "n": n, "m": m}
+
+
+def _mlstm_decode(cfg, p, x, cache, ctx: BlockCtx):
+    q, k, v, ig, fg, z = _mlstm_io(cfg, p, x)
+    hc, (C, n, m) = mlstm_decode_step(
+        q, k, v, ig, fg, (cache["C"], cache["n"], cache["m"])
+    )
+    return _mlstm_out(cfg, p, x, hc, z), {"C": C, "n": n, "m": m}
+
+
+MLSTM_BLOCK = Block(
+    kind="mlstm",
+    template=_mlstm_template,
+    apply=_mlstm_apply,
+    prefill=_mlstm_prefill,
+    decode=_mlstm_decode,
+    cache_template=_mlstm_cache_template,
+)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — sequential scalar-memory cell + gated FFN
+# ---------------------------------------------------------------------------
+
+def _slstm_template(cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    f2 = 2 * d
+    return {
+        "ln": PT((d,), (None,), init="ones"),
+        "w_gates": PT((d, H, 4, hd), ("embed", "heads", None, None), fan_in=d),
+        "b_gates": PT((H, 4, hd), ("heads", None, None), init="zeros"),
+        "r_gates": PT((H, hd, 4, hd), ("heads", None, None, None), init="small"),
+        "norm_cell": PT((d,), (None,), init="ones"),
+        "wo": PT((d, d), (None, "embed")),
+        "ln2": PT((d,), (None,), init="ones"),
+        "wg": PT((d, f2), ("embed", "ff")),
+        "wi": PT((d, f2), ("embed", "ff")),
+        "wo2": PT((f2, d), ("ff", "embed")),
+    }
+
+
+def _slstm_gates(cfg, p, x):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gx = jnp.einsum("bsd,dhgk->bshgk", h, p["w_gates"]) + p["b_gates"]
+    return gx
+
+
+def _slstm_post(cfg, p, x, hs):
+    B, S = x.shape[0], x.shape[1]
+    hc = rms_norm(hs.reshape(B, S, cfg.d_model), p["norm_cell"], cfg.norm_eps)
+    x = x + jnp.einsum("bsd,de->bse", hc, p["wo"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f = swiglu(h2, p["wg"], p["wi"], p["wo2"])
+    return constrain(x + f, "batch", "act_seq", None)
+
+
+def _slstm_apply(cfg, p, x, ctx: BlockCtx):
+    gx = _slstm_gates(cfg, p, x)
+    hs, _ = slstm_scan(gx, p["r_gates"])
+    return _slstm_post(cfg, p, x, hs)
+
+
+def _slstm_cache_template(cfg: ArchConfig, B: int, ctx: BlockCtx):
+    H, hd = cfg.n_heads, cfg.hd
+    v = PT((B, H, hd), ("batch", "heads", None), init="zeros", dtype="float32")
+    return {"c": v, "n": PT((B, H, hd), ("batch", "heads", None), init="ones",
+                            dtype="float32"),
+            "h": v, "m": PT((B, H, hd), ("batch", "heads", None),
+                            init="neg_inf", dtype="float32")}
+
+
+def _slstm_prefill(cfg, p, x, ctx: BlockCtx):
+    gx = _slstm_gates(cfg, p, x)
+    hs, (c, n, h, m) = slstm_scan(gx, p["r_gates"])
+    return _slstm_post(cfg, p, x, hs), {"c": c, "n": n, "h": h, "m": m}
+
+
+def _slstm_decode(cfg, p, x, cache, ctx: BlockCtx):
+    gx = _slstm_gates(cfg, p, x)
+    hs, (c, n, h, m) = slstm_decode_step(
+        gx, p["r_gates"], (cache["c"], cache["n"], cache["h"], cache["m"])
+    )
+    return _slstm_post(cfg, p, x, hs), {"c": c, "n": n, "h": h, "m": m}
+
+
+SLSTM_BLOCK = Block(
+    kind="slstm",
+    template=_slstm_template,
+    apply=_slstm_apply,
+    prefill=_slstm_prefill,
+    decode=_slstm_decode,
+    cache_template=_slstm_cache_template,
+)
+
+
+BLOCKS: Dict[str, Block] = {
+    b.kind: b for b in (ATTN_BLOCK, CROSS_BLOCK, HYBRID_BLOCK, MLSTM_BLOCK,
+                        SLSTM_BLOCK)
+}

@@ -1,0 +1,199 @@
+"""Shared layer primitives + the parameter-template machinery.
+
+Every model family declares its parameters as a tree of ``PT`` (param
+template) records — one source of truth from which we derive:
+
+  * ``init_params``   — PRNG materialization (smoke tests, examples)
+  * ``abstract_params`` — ShapeDtypeStructs (dry-run, no allocation)
+  * ``param_pspecs``  — PartitionSpecs from logical axes (in_shardings)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import ShardingRules, constrain, logical_to_pspec
+
+__all__ = [
+    "PT",
+    "init_params",
+    "abstract_params",
+    "param_pspecs",
+    "rms_norm",
+    "rope_table",
+    "apply_rope",
+    "swiglu",
+    "cross_entropy_chunked",
+]
+
+
+@dataclass(frozen=True)
+class PT:
+    """Parameter/state template: shape + logical axes + init law (+dtype)."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | small | neg_inf
+    fan_in: int = 0            # 0 -> last-but-one dim (normal init scale)
+    dtype: str = ""            # "" = caller default (cache states: "float32")
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+    def resolve_dtype(self, default):
+        return jnp.dtype(self.dtype) if self.dtype else default
+
+
+def _is_template(x: Any) -> bool:
+    return isinstance(x, PT)
+
+
+def _map_templates(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_template)
+
+
+def init_params(template, key: jax.Array, dtype=jnp.bfloat16):
+    leaves = [t for t in jax.tree_util.tree_leaves(tree=template, is_leaf=_is_template)]
+    keys = list(jax.random.split(key, max(len(leaves), 1)))
+    it = iter(keys)
+
+    def make(t: PT):
+        k = next(it)
+        dt = t.resolve_dtype(dtype)
+        if t.init == "zeros":
+            return jnp.zeros(t.shape, dt)
+        if t.init == "ones":
+            return jnp.ones(t.shape, dt)
+        if t.init == "neg_inf":
+            return jnp.full(t.shape, -1e30, dt)
+        fan = t.fan_in or (t.shape[-2] if len(t.shape) >= 2 else t.shape[-1])
+        scale = 1.0 / math.sqrt(max(fan, 1))
+        if t.init == "small":
+            scale *= 0.1
+        return (jax.random.normal(k, t.shape, jnp.float32) * scale).astype(dt)
+
+    return _map_templates(make, template)
+
+
+def abstract_params(template, dtype=jnp.bfloat16):
+    return _map_templates(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.resolve_dtype(dtype)), template
+    )
+
+
+def param_pspecs(template, rules: ShardingRules):
+    """PT -> PartitionSpec, leaving any non-divisible dim unsharded (the
+    same guard ``constrain`` applies to activations)."""
+
+    def one(t: PT):
+        parts = []
+        for dim, name in zip(t.shape, t.axes):
+            phys = rules.table.get(name) if name is not None else None
+            if phys is not None:
+                n = rules.axis_size(name)
+                if n <= 1 or dim % n != 0:
+                    phys = None
+            parts.append(phys)
+        while parts and parts[-1] is None:
+            parts.pop()
+        from jax.sharding import PartitionSpec as P
+
+        return P(*parts)
+
+    return _map_templates(one, template)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_table(seq_len: int, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables [seq_len, head_dim/2], float32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, hd]; cos/sin [S, hd/2] (broadcast over batch/heads)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+def swiglu(x: jax.Array, wg: jax.Array, wi: jax.Array, wo: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (silu(x@wg) * (x@wi)) @ wo, TP-sharded on the hidden dim."""
+    g = jnp.einsum("...d,df->...f", x, wg)
+    u = jnp.einsum("...d,df->...f", x, wi)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    if h.ndim == 3:
+        h = constrain(h, "batch", "act_seq", "ff")
+    return jnp.einsum("...f,fd->...d", h, wo)
+
+
+def cross_entropy_chunked(
+    h: jax.Array,
+    lm_head: jax.Array,
+    labels: jax.Array,
+    *,
+    logit_scale: float = 1.0,
+    n_chunks: int = 8,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Memory-bounded CE: scan over sequence chunks so [B,Sc,V] logits never
+    materialize for the full sequence (V up to 152k makes full logits the
+    single biggest activation otherwise). lm_head [d, V] is vocab-TP-sharded;
+    the logsumexp reduces over the sharded V dim (GSPMD inserts the
+    all-reduce).
+    """
+    B, S, d = h.shape
+    while S % n_chunks:
+        n_chunks -= 1
+    Sc = S // n_chunks
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    # slice chunks inside the scan body (dynamic_slice reads only the
+    # chunk) — the previous reshape+swapaxes materialized a transposed
+    # f32 copy of the whole hidden stream (~10% of per-chip HBM traffic
+    # on the vision-90b train cell; §Perf)
+    def body(carry, i):
+        hx = jax.lax.dynamic_slice_in_dim(h, i * Sc, Sc, axis=1)
+        lx = jax.lax.dynamic_slice_in_dim(labels, i * Sc, Sc, axis=1)
+        mx = jax.lax.dynamic_slice_in_dim(mask, i * Sc, Sc,
+                                          axis=1).astype(jnp.float32)
+        logits = jnp.einsum("bsd,dv->bsv", hx, lm_head).astype(jnp.float32)
+        logits = logits * logit_scale
+        logits = constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction instead of take_along_axis: reduces over the
+        # vocab-sharded dim with a partial-sum + all-reduce (no all-gather).
+        onehot = jax.nn.one_hot(lx, logits.shape[-1], dtype=logits.dtype)
+        tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        nll = (lse - tgt) * mx
+        return (carry[0] + nll.sum(), carry[1] + mx.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32),) * 2,
+        jnp.arange(n_chunks, dtype=jnp.int32))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,4 @@
+"""Serving substrate: prefill/decode programs + batched engine."""
+from .engine import Request, ServeEngine, make_decode_fn, make_prefill_fn
+
+__all__ = ["Request", "ServeEngine", "make_decode_fn", "make_prefill_fn"]

@@ -1,0 +1,131 @@
+"""Serving: prefill/decode step factories + a batched engine.
+
+``make_prefill_fn`` / ``make_decode_fn`` produce the exact programs the
+dry-run lowers for the ``prefill_32k`` / ``decode_32k`` / ``long_500k``
+cells. The ``ServeEngine`` adds the operational layer a deployment needs:
+request queue, continuous batching into fixed decode slots, greedy/top-k
+sampling, and **straggler mitigation** — a request that exceeds its decode
+deadline is evicted and re-queued (bounded retries), so one stuck stream
+cannot head-of-line-block the batch.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import ShardingRules, use_rules
+from ..models.model import Model
+
+__all__ = ["make_prefill_fn", "make_decode_fn", "ServeEngine", "Request"]
+
+
+def make_prefill_fn(model: Model, rules: Optional[ShardingRules],
+                    smax: int) -> Callable:
+    def prefill(params, batch):
+        with use_rules(rules):
+            return model.prefill(params, batch, smax)
+
+    return prefill
+
+
+def make_decode_fn(model: Model, rules: Optional[ShardingRules]) -> Callable:
+    def decode(params, cache, tokens):
+        with use_rules(rules):
+            return model.decode_step(params, cache, tokens)
+
+    return decode
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new: int
+    generated: List[int] = field(default_factory=list)
+    retries: int = 0
+    deadline_steps: Optional[int] = None  # straggler budget per request
+    steps_used: int = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+
+class ServeEngine:
+    """Single-slot-group batched decoder (greedy sampling).
+
+    Not a throughput-optimal server — it is the *correctness* reference for
+    the serving programs plus the scheduling/straggler logic, which TPU-EM
+    simulates at pod scale.
+    """
+
+    def __init__(self, model: Model, params, *, smax: int,
+                 rules: Optional[ShardingRules] = None,
+                 max_retries: int = 1, jit: bool = True):
+        self.model = model
+        self.params = params
+        self.smax = smax
+        self.rules = rules
+        self.max_retries = max_retries
+        pf, dc = make_prefill_fn(model, rules, smax), make_decode_fn(model, rules)
+        self.prefill_fn = jax.jit(pf) if jit else pf
+        self.decode_fn = jax.jit(dc, donate_argnums=(1,)) if jit else dc
+        self.queue: List[Request] = []
+        self.completed: Dict[int, Request] = {}
+        self.evicted: List[int] = []
+        self._rid = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               deadline_steps: Optional[int] = None) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
+                                  max_new, deadline_steps=deadline_steps))
+        return self._rid
+
+    def _prefill_batch(self, reqs: List[Request]):
+        S = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((len(reqs), S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad (simple)
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self.prefill_fn(self.params, batch)
+        return logits, cache
+
+    def run(self, batch_size: int = 4) -> Dict[int, List[int]]:
+        """Drain the queue; returns {rid: generated tokens}."""
+        while self.queue:
+            reqs = [self.queue.pop(0) for _ in
+                    range(min(batch_size, len(self.queue)))]
+            logits, cache = self._prefill_batch(reqs)
+            next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+            live = list(range(len(reqs)))
+            while live:
+                for i in list(live):
+                    r = reqs[i]
+                    r.generated.append(int(next_tok[i]))
+                    r.steps_used += 1
+                    if r.done:
+                        live.remove(i)
+                        self.completed[r.rid] = r
+                    elif (r.deadline_steps is not None
+                          and r.steps_used >= r.deadline_steps):
+                        # straggler: evict; re-queue with remaining budget
+                        live.remove(i)
+                        if r.retries < self.max_retries:
+                            r.retries += 1
+                            r.steps_used = 0
+                            self.queue.append(r)
+                        else:
+                            self.evicted.append(r.rid)
+                if not live:
+                    break
+                logits, cache = self.decode_fn(
+                    self.params, cache, jnp.asarray(next_tok)[:, None])
+                next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+        return {rid: r.generated for rid, r in self.completed.items()}

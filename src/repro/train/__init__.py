@@ -1,0 +1,25 @@
+"""Training substrate: optimizer, step factory, data, checkpointing."""
+from .checkpoint import CheckpointManager, latest_step, restore_checkpoint, \
+    save_checkpoint
+from .data import SyntheticData
+from .loop import abstract_state, batch_pspecs, init_state, make_train_step, \
+    schedule_for, state_pspecs
+from .optim import adamw_init, adamw_update, cosine_schedule, wsd_schedule
+
+__all__ = [
+    "CheckpointManager",
+    "SyntheticData",
+    "abstract_state",
+    "adamw_init",
+    "adamw_update",
+    "batch_pspecs",
+    "cosine_schedule",
+    "init_state",
+    "latest_step",
+    "make_train_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "schedule_for",
+    "state_pspecs",
+    "wsd_schedule",
+]

@@ -1,0 +1,79 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Int8 block-quantization with **error feedback**: each step the residual
+between the true gradient and its quantized form is carried into the next
+step's gradient, so the compression bias vanishes in expectation (standard
+EF-SGD result). On a real multi-pod deployment this wraps the inter-pod
+gradient segment (the intra-pod ICI reduce-scatter stays full-precision);
+TPU-EM models it as a 4x reduction of DCN collective bytes.
+
+Numerics are validated in tests (quantization error bound, EF convergence
+on a quadratic).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress_grads",
+           "ef_init", "compression_ratio"]
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, n
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8. Returns (q int8 [nb, BLOCK], scale f32 [nb])."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def ef_init(params) -> Dict:
+    """Error-feedback residual accumulator (fp32, param-sharded)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def ef_compress_grads(grads, ef_state):
+    """g' = Q(g + e);  e' = (g + e) - g'. Applied leaf-wise."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s, g.shape, jnp.float32)
+        return deq.astype(g.dtype), corrected - deq
+
+    out = jax.tree_util.tree_map(one, grads, ef_state)
+    is2 = lambda x: isinstance(x, tuple) and len(x) == 2
+    new_g = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is2)
+    new_e = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is2)
+    return new_g, new_e
+
+
+def compression_ratio(dtype=jnp.bfloat16) -> float:
+    """Bytes ratio vs uncompressed (int8 payload + per-block f32 scale)."""
+    raw = jnp.dtype(dtype).itemsize
+    return (1.0 + 4.0 / BLOCK) / raw

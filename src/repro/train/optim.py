@@ -1,0 +1,115 @@
+"""Optimizer: AdamW with fp32 moments + LR schedules (cosine, WSD).
+
+Moments live in float32 and inherit the parameter sharding (params are
+FSDP-sharded over 'data' via the 'embed' logical axis and TP-sharded over
+'model', so optimizer state is ZeRO-style sharded with no extra machinery —
+GSPMD keeps the update fully local).
+
+WSD (warmup-stable-decay) is the MiniCPM schedule: linear warmup, long
+stable plateau, short exponential-ish decay tail.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "wsd_schedule",
+]
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree
+    ), norm
+
+
+def adamw_init(params) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params,
+    grads,
+    opt_state: Dict,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Dict, Dict]:
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads,
+                                 opt_state["m"], opt_state["v"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree_util.tree_map(lambda t3: t3[0], out, is_leaf=is3)
+    new_m = jax.tree_util.tree_map(lambda t3: t3[1], out, is_leaf=is3)
+    new_v = jax.tree_util.tree_map(lambda t3: t3[2], out, is_leaf=is3)
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, peak_lr * cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor_frac: float = 0.01) -> Callable:
+    """MiniCPM warmup-stable-decay: plateau at peak, exp decay tail."""
+    decay_steps = max(int(total * decay_frac), 1)
+    stable_end = total - decay_steps
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        d = jnp.clip((s - stable_end) / decay_steps, 0.0, 1.0)
+        tail = peak_lr * jnp.exp(jnp.log(floor_frac) * d)
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < stable_end, peak_lr, tail))
+
+    return lr

@@ -1,0 +1,203 @@
+"""Event kernel: ordering, determinism, conditions, resources (paper §3.1)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AllOf, AnyOf, Container, Environment, Event,
+                        Interrupt, PriorityItem, PriorityStore, Resource,
+                        Store)
+
+
+def test_timeout_ordering():
+    env = Environment()
+    log = []
+
+    def proc(delay, tag):
+        yield env.timeout(delay)
+        log.append((env.now, tag))
+
+    env.process(proc(5, "b"))
+    env.process(proc(1, "a"))
+    env.process(proc(5, "c"))  # same time as b: insertion order preserved
+    env.run()
+    assert log == [(1, "a"), (5, "b"), (5, "c")]
+
+
+def test_process_return_value_and_event_chain():
+    env = Environment()
+
+    def inner():
+        yield env.timeout(3)
+        return 42
+
+    def outer():
+        val = yield env.process(inner())
+        return val * 2
+
+    p = env.process(outer())
+    env.run()
+    assert p.value == 84
+    assert env.now == 3
+
+
+def test_all_of_any_of():
+    env = Environment()
+    results = {}
+
+    def waiter():
+        ev = AnyOf(env, [env.timeout(10, "slow"), env.timeout(2, "fast")])
+        vals = yield ev
+        results["any"] = (env.now, vals)
+        ev2 = AllOf(env, [env.timeout(1), env.timeout(4)])
+        yield ev2
+        results["all_t"] = env.now
+
+    env.process(waiter())
+    env.run()
+    assert results["any"][0] == 2 and "fast" in results["any"][1]
+    assert results["all_t"] == 2 + 4
+
+
+def test_interrupt():
+    env = Environment()
+    caught = []
+
+    def victim():
+        try:
+            yield env.timeout(100)
+        except Interrupt as e:
+            caught.append((env.now, e.cause))
+
+    def attacker(p):
+        yield env.timeout(7)
+        p.interrupt("preempt")
+
+    p = env.process(victim())
+    env.process(attacker(p))
+    env.run()
+    assert caught == [(7, "preempt")]
+
+
+def test_run_until_time():
+    env = Environment()
+
+    def ticker():
+        while True:
+            yield env.timeout(10)
+
+    env.process(ticker())
+    env.run(until=35)
+    assert env.now == 35
+
+
+def test_store_fifo_and_backpressure():
+    env = Environment()
+    store = Store(env, capacity=2)
+    got, put_times = [], []
+
+    def producer():
+        for i in range(4):
+            yield store.put(i)
+            put_times.append(env.now)
+
+    def consumer():
+        while len(got) < 4:
+            yield env.timeout(5)
+            item = yield store.get()
+            got.append(item)
+
+    env.process(producer())
+    env.process(consumer())
+    env.run()
+    assert got == [0, 1, 2, 3]          # FIFO order
+    assert put_times[0] == 0 and put_times[1] == 0
+    assert put_times[2] == 5            # blocked until a get freed a slot
+
+
+def test_priority_store():
+    env = Environment()
+    ps = PriorityStore(env)
+    out = []
+
+    def run():
+        yield ps.put(PriorityItem(3, "low"))
+        yield ps.put(PriorityItem(1, "high"))
+        yield ps.put(PriorityItem(2, "mid"))
+        for _ in range(3):
+            item = yield ps.get()
+            out.append(item.item)
+
+    env.process(run())
+    env.run()
+    assert out == ["high", "mid", "low"]
+
+
+def test_container_blocking():
+    env = Environment()
+    c = Container(env, capacity=10, init=0)
+    log = []
+
+    def taker():
+        yield c.get(6)
+        log.append(("got", env.now))
+
+    def giver():
+        yield env.timeout(4)
+        yield c.put(6)
+
+    env.process(taker())
+    env.process(giver())
+    env.run()
+    assert log == [("got", 4)]
+
+
+def test_resource_mutual_exclusion():
+    env = Environment()
+    r = Resource(env, capacity=1)
+    spans = []
+
+    def user(tag):
+        req = r.request()
+        yield req
+        t0 = env.now
+        yield env.timeout(10)
+        r.release(req)
+        spans.append((tag, t0, env.now))
+
+    env.process(user("a"))
+    env.process(user("b"))
+    env.run()
+    # non-overlapping
+    assert spans[0][2] <= spans[1][1]
+
+
+@given(st.lists(st.floats(min_value=0, max_value=1e6, allow_nan=False),
+                min_size=1, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_determinism_property(delays):
+    """Identical inputs -> identical completion traces (paper determinism)."""
+
+    def run_once():
+        env = Environment()
+        log = []
+
+        def proc(d, tag):
+            yield env.timeout(d)
+            log.append((env.now, tag))
+
+        for i, d in enumerate(delays):
+            env.process(proc(d, i))
+        env.run()
+        return log
+
+    assert run_once() == run_once()
+
+
+def test_yield_non_event_fails():
+    env = Environment()
+
+    def bad():
+        yield 42
+
+    env.process(bad())
+    with pytest.raises(TypeError):
+        env.run()

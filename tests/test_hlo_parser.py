@@ -1,0 +1,131 @@
+"""HLO parser: trip counts, dot flops, replica groups, task extraction.
+
+The trip-count test builds a scan-vs-unrolled pair on the fly and checks
+the parser's trip-aware totals against XLA's own cost_analysis of the
+UNROLLED module (which needs no trip accounting).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph.hlo_parser import (decode_replica_groups, extract_tasks,
+                                    parse_module, summarize)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                   "artifacts", "dryrun")
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_vs_unrolled():
+    L, M = 12, 128
+    w = jax.ShapeDtypeStruct((L, M, M), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, M), jnp.float32)
+
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    def f_unroll(x, w):
+        for i in range(L):
+            x = jnp.tanh(x @ w[i])
+        return x
+
+    s_scan = summarize(_hlo(f_scan, x, w))
+    s_unroll = summarize(_hlo(f_unroll, x, w))
+    expected = 2.0 * 8 * M * M * L
+    assert s_scan.dot_flops == pytest.approx(expected, rel=0.01)
+    assert s_unroll.dot_flops == pytest.approx(expected, rel=0.01)
+    # cross-check against XLA's analysis of the unrolled module
+    ca = jax.jit(f_unroll).lower(x, w).compile().cost_analysis()
+    assert s_unroll.dot_flops == pytest.approx(ca["flops"], rel=0.05)
+
+
+def test_dot_flops_with_batch_dims():
+    a = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+
+    def f(a, b):
+        return jax.lax.dot_general(a, b, (((2,), (1,)), ((0,), (0,))))
+
+    s = summarize(_hlo(f, a, b))
+    assert s.dot_flops == pytest.approx(2 * 4 * 64 * 16 * 32, rel=0.01)
+
+
+def test_replica_groups_decoding():
+    g = decode_replica_groups("replica_groups=[128,2]<=[256]")
+    assert g.shape == (128, 2)
+    assert list(g[0]) == [0, 1] and list(g[1]) == [2, 3]
+    g2 = decode_replica_groups("replica_groups=[16,16]<=[16,16]T(1,0)")
+    assert g2.shape == (16, 16)
+    assert list(g2[0][:3]) == [0, 16, 32]      # transposed iota
+    g3 = decode_replica_groups("replica_groups={{0,8},{1,9}}")
+    assert g3.shape == (2, 2) and list(g3[1]) == [1, 9]
+
+
+def test_cross_pod_detection():
+    g = decode_replica_groups("replica_groups=[2,256]<=[512]")
+    pods = g // 256
+    assert bool(np.any(pods.max(axis=1) != pods.min(axis=1))) is False
+    g2 = decode_replica_groups("replica_groups=[256,2]<=[2,256]T(1,0)")
+    pods2 = g2 // 256
+    assert bool(np.any(pods2.max(axis=1) != pods2.min(axis=1))) is True
+
+
+def test_parse_module_structure():
+    def f(x):
+        return jnp.sum(x * 2.0)
+
+    text = _hlo(f, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    mod = parse_module(text)
+    assert mod.entry in mod.computations
+    entry = mod.computations[mod.entry]
+    assert any(i.opcode in ("fusion", "reduce", "multiply")
+               for i in entry.instrs)
+
+
+def test_extract_tasks_dag():
+    L, M = 4, 64
+
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    text = _hlo(f, jax.ShapeDtypeStruct((8, M), jnp.float32),
+                jax.ShapeDtypeStruct((L, M, M), jnp.float32))
+    tasks = extract_tasks(text)
+    mxu = [t for t in tasks if t.engine == "mxu"]
+    assert len(mxu) == L                       # one dot per unrolled trip
+    # deps are acyclic and in-range
+    for i, t in enumerate(tasks):
+        assert all(0 <= d < i + 1 for d in t.deps)
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="no dry-run artifacts")
+def test_artifact_sanity():
+    import gzip
+    import json
+
+    f = os.path.join(ART, "smollm-135m__train_4k__pod16x16")
+    if not os.path.exists(f + ".json"):
+        pytest.skip("smollm artifact missing")
+    cell = json.load(open(f + ".json"))
+    if cell.get("status") != "ok":
+        pytest.skip("cell not ok")
+    text = gzip.open(f + ".hlo.txt.gz", "rt").read()
+    s = summarize(text, pod_size=256)
+    # trip-aware flops must exceed XLA's scan-blind count
+    assert s.dot_flops > 2 * cell["cost_analysis"]["flops"]
+    # 6ND per-chip lower bound (param_count from the config)
+    n, d = cell["param_count"], 4096 * 256
+    assert s.dot_flops > 6 * n * d / 256 * 0.8
+    assert s.collective_bytes() > 0

@@ -1,0 +1,167 @@
+"""Hardware component models: MXU pipeline, vec characterization, HBM
+paging, DMA descriptor splitting/compression, ICI collectives."""
+import numpy as np
+import pytest
+
+from repro.core import Environment, Tracer
+from repro.hw.dma import Dma, DmaDescriptor
+from repro.hw.ici import CollectiveSpec, IciFabric
+from repro.hw.memory import Hbm, VMem
+from repro.hw.mxu import GemmSpec, Mxu, choose_block
+from repro.hw.presets import V5E, paper_skew
+from repro.hw.vecunit import VecSpec, VecUnit, fit_table
+
+
+def _system_bits(cfg):
+    env = Environment()
+    tr = Tracer()
+    vmem = VMem(env, cfg, tr)
+    return env, tr, vmem
+
+
+def test_choose_block_fits_budget_and_aligns():
+    cfg = V5E
+    spec = GemmSpec(m=4096, n=8192, k=4096)
+    bm, bn, bk = choose_block(spec, cfg)
+    ws = bm * bk * 2 + bk * bn * 2 + bm * bn * 4
+    assert ws <= cfg.vmem_block_budget
+    assert bm % cfg.mxu_rows == 0 and bn % cfg.mxu_cols == 0 and bk % 128 == 0
+
+
+def test_mxu_time_near_ideal_for_big_gemm():
+    cfg = V5E
+    env, tr, vmem = _system_bits(cfg)
+    mxu = Mxu(env, cfg, vmem, tr)
+    spec = GemmSpec(m=4096, n=4096, k=4096)
+    done = env.process(mxu.run(spec))
+    env.run(done)
+    ideal = spec.flops / (cfg.peak_tflops * 1e12) * 1e9
+    assert ideal <= env.now <= 3.0 * ideal
+
+
+def test_mxu_ragged_underutilization():
+    """Fig 5 mechanism: tiny M wastes systolic rows -> worse efficiency."""
+    cfg = V5E
+
+    def eff(m):
+        env, tr, vmem = _system_bits(cfg)
+        mxu = Mxu(env, cfg, vmem, tr)
+        spec = GemmSpec(m=m, n=2048, k=2048)
+        done = env.process(mxu.run(spec))
+        env.run(done)
+        ideal = spec.flops / (cfg.peak_tflops * 1e12) * 1e9
+        return ideal / env.now
+
+    assert eff(8) < 0.25 * eff(2048)
+
+
+def test_mxu_pipeline_overlap():
+    """4-stage pipeline: many blocks take far less than serial sum."""
+    cfg = V5E
+    env, tr, vmem = _system_bits(cfg)
+    mxu = Mxu(env, cfg, vmem, tr)
+    spec = GemmSpec(m=4096, n=4096, k=512)
+    done = env.process(mxu.run(spec))
+    env.run(done)
+    mac_busy = tr.busy_time("mxu")
+    vmem_busy = tr.busy_time("vmem")
+    assert env.now < 0.9 * (mac_busy + vmem_busy)  # stages overlap
+
+
+def test_vec_characterization_fit():
+    """The MoviSim-stand-in fit recovers a known (offset,a,b,c) model."""
+    lane = 1024
+    true = dict(offset=40.0, a=22.0, b=3.0, c=6.0)
+    samples = []
+    for n in (100, 1024, 5000, 8192, 65536, 100000, 123457):
+        vectors = n // lane
+        scalars = n - vectors * lane
+        blocks = vectors // 8
+        rem = vectors - blocks * 8
+        cycles = (true["offset"] + true["a"] * blocks + true["b"] * rem
+                  + true["c"] * scalars)
+        samples.append((n, cycles))
+    k = fit_table(samples, lane)
+    assert k.offset == pytest.approx(true["offset"], rel=0.05)
+    assert k.a == pytest.approx(true["a"], rel=0.05)
+    assert k.c == pytest.approx(true["c"], rel=0.05)
+
+
+def test_vecunit_kind_costs_differ():
+    cfg = V5E
+    env, tr, vmem = _system_bits(cfg)
+    vpu = VecUnit(env, cfg, vmem, tr)
+    n = 1 << 20
+    t_add = vpu.ideal_time_ns(VecSpec(n_elems=n, kind="add"))
+    t_tanh = vpu.ideal_time_ns(VecSpec(n_elems=n, kind="tanh"))
+    assert t_tanh > 2 * t_add
+
+
+def test_hbm_page_policy():
+    """Open-page sequential streaming beats closed-page (row hits)."""
+
+    def run(policy):
+        cfg = paper_skew(hbm_page_policy=policy)
+        env = Environment()
+        tr = Tracer()
+        hbm = Hbm(env, cfg, tr)
+
+        def seq():
+            for i in range(64):
+                yield from hbm.access(i * 256, 256)
+
+        p = env.process(seq())
+        env.run(p)
+        return env.now, hbm.row_hits
+
+    t_open, hits_open = run("open")
+    t_closed, hits_closed = run("closed")
+    assert hits_open > hits_closed
+    assert t_open < t_closed
+
+
+def test_dma_descriptor_split_and_channels():
+    cfg = V5E
+    env = Environment()
+    tr = Tracer()
+    hbm = Hbm(env, cfg, tr)
+    vmem = VMem(env, cfg, tr)
+    dma = Dma(env, cfg, hbm, vmem, tr)
+    d = DmaDescriptor(nbytes=8 * 2**20, contiguous_run=1 << 20)
+    assert len(dma._requests(d)) == 8
+    done = env.process(dma.run(d))
+    env.run(done)
+    # multi-channel: faster than serial per-request sum
+    assert env.now < 8 * (cfg.dma_desc_overhead_ns
+                          + hbm.stream_time_ns(1 << 20)) * 0.9
+
+
+def test_dma_compression_reduces_time():
+    cfg = V5E.replace(dma_compression=True)
+    env = Environment()
+    tr = Tracer()
+    hbm = Hbm(env, cfg, tr)
+    vmem = VMem(env, cfg, tr)
+    dma = Dma(env, cfg, hbm, vmem, tr)
+    raw = dma.ideal_time_ns(DmaDescriptor(nbytes=64 * 2**20))
+    comp = dma.ideal_time_ns(DmaDescriptor(nbytes=64 * 2**20,
+                                           compressed=True))
+    assert comp < raw
+
+
+@pytest.mark.parametrize("op,factor", [
+    ("all-reduce", 2.0), ("all-gather", 1.0), ("reduce-scatter", 1.0)])
+def test_collective_link_bytes(op, factor):
+    spec = CollectiveSpec(op=op, payload_bytes=1024, group_size=16)
+    assert spec.link_bytes() == pytest.approx(factor * 1024 * 15 / 16)
+
+
+def test_ici_vs_dcn():
+    cfg = V5E
+    env = Environment()
+    tr = Tracer()
+    fab = IciFabric(env, cfg, tr)
+    intra = fab.ideal_time_ns(CollectiveSpec("all-reduce", 2**20, 16))
+    cross = fab.ideal_time_ns(CollectiveSpec("all-reduce", 2**20, 16,
+                                             cross_pod=True))
+    assert cross > intra

@@ -1,0 +1,135 @@
+"""Per-arch smoke tests: reduced configs of all 10 assigned architectures
+run one forward + one full train step on CPU; shapes + finiteness asserted.
+Full configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.models import build_model
+from repro.train.loop import init_state, make_train_step
+
+ARCHS = list(REGISTRY)
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model), np.float32))
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32))
+    if cfg.family == "vlm":
+        batch["images"] = jnp.asarray(rng.standard_normal(
+            (B, cfg.n_image_tokens, cfg.d_model), np.float32))
+    batch["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = REGISTRY[arch].reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    h = model.forward(params, batch, for_train=False)
+    B, S = 2, 32
+    assert h.shape == (B, S + cfg.n_meta_tokens, cfg.d_model)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    cfg = REGISTRY[arch].reduced()
+    model = build_model(cfg, remat=True)
+    state = init_state(model, jax.random.PRNGKey(0), dtype=jnp.float32)
+    step_fn = make_train_step(model, None,
+                              lr_schedule=lambda s: jnp.asarray(1e-3))
+    batch = _batch(cfg)
+    state, metrics = step_fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    assert int(state["opt"]["step"]) == 1
+    # a second step changes the loss (params actually updated)
+    _, m2 = step_fn(state, batch)
+    assert float(m2["loss"]) != float(metrics["loss"])
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "qwen3-32b", "xlstm-125m",
+                                  "hymba-1.5b", "qwen3-moe-30b-a3b"])
+def test_decode_matches_forward(arch):
+    """Prefill + 2 decode steps == full forward logits (f32, exact-ish)."""
+    cfg = REGISTRY[arch].reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    B, S, SMAX = 2, 20, 40
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 2),
+                                    dtype=np.int32))
+    batch = {"tokens": toks[:, :S]}
+    lg, cache = model.prefill(params, batch, SMAX)
+    lg1, cache = model.decode_step(params, cache, toks[:, S:S + 1])
+    lg2, cache = model.decode_step(params, cache, toks[:, S + 1:S + 2])
+
+    def ref(n):
+        h = model.forward(params, {"tokens": toks[:, :n]}, for_train=False)
+        if cfg.n_meta_tokens:
+            h = h[:, cfg.n_meta_tokens:]
+        return model._logits(params, h[:, -1])
+
+    for got, n in ((lg, S), (lg1, S + 1), (lg2, S + 2)):
+        want = ref(n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_vlm_needs_images():
+    cfg = REGISTRY["llama-3.2-vision-90b"].reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    # cross-attn gates init at 0 (llama-3.2 behavior: image influence is
+    # learned); open them so the path is observable
+    params["segments"][0]["cross"]["gate_attn"] = jnp.ones(
+        params["segments"][0]["cross"]["gate_attn"].shape, jnp.bfloat16)
+    batch = _batch(cfg)
+    # changing the image tokens changes the output (cross-attn is live)
+    h1 = model.forward(params, batch, for_train=False)
+    batch2 = dict(batch)
+    batch2["images"] = batch["images"] + 1.0
+    h2 = model.forward(params, batch2, for_train=False)
+    assert float(jnp.max(jnp.abs(h1.astype(jnp.float32)
+                                 - h2.astype(jnp.float32)))) > 1e-3
+
+
+def test_encoder_bidirectional():
+    """HuBERT is not causal: flipping a late frame changes early outputs."""
+    cfg = REGISTRY["hubert-xlarge"].reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    h1 = model.forward(params, batch, for_train=False)
+    frames2 = batch["frames"].at[:, -1].add(10.0)
+    h2 = model.forward(params, {**batch, "frames": frames2},
+                       for_train=False)
+    delta_early = float(jnp.max(jnp.abs(
+        (h1 - h2)[:, :4].astype(jnp.float32))))
+    assert delta_early > 1e-4
+
+
+def test_param_counts_near_nominal():
+    """Analytic parameter counts are in the right ballpark for the
+    name-plate sizes (within a factor ~2 — embeddings/untied heads vary)."""
+    nominal = {
+        "smollm-135m": 135e6, "minicpm-2b": 2.4e9, "qwen2-1.5b": 1.5e9,
+        "qwen3-32b": 32e9, "qwen3-moe-30b-a3b": 30e9,
+        "phi3.5-moe-42b-a6.6b": 42e9, "xlstm-125m": 125e6,
+        "hymba-1.5b": 1.5e9,
+    }
+    for name, n in nominal.items():
+        got = REGISTRY[name].param_count()
+        assert 0.45 * n < got < 2.2 * n, (name, got, n)

@@ -1,0 +1,101 @@
+"""Tracer PTI accounting + Power-EM characterization and integration."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Tracer
+from repro.hw.presets import V5E, paper_skew
+from repro.power.characterization import (DEFAULT_CHARS, LeakageLUT,
+                                          PowerChar, VFCurve)
+from repro.power.powerem import PowerEM, build_power_tree
+
+
+def test_busy_time_union():
+    tr = Tracer()
+    tr.emit("m", "busy", 0, 10, 1)
+    tr.emit("m", "busy", 5, 15, 1)     # overlaps
+    tr.emit("m", "busy", 20, 25, 1)
+    assert tr.busy_time("m") == 15 + 5
+
+
+def test_pti_prorata():
+    tr = Tracer()
+    tr.emit("m", "bytes", 0, 20, 100)  # uniform rate 5/ns
+    bins = tr.pti_activity("m", "bytes", pti=8, t_end=24)
+    assert bins == pytest.approx([40, 40, 20])
+
+
+@given(st.lists(st.tuples(
+    st.floats(0, 1e4, allow_nan=False),
+    st.floats(0.1, 1e3, allow_nan=False),
+    st.floats(0.1, 1e5, allow_nan=False)), min_size=1, max_size=30),
+    st.floats(1.0, 1e4, allow_nan=False))
+@settings(max_examples=60, deadline=None)
+def test_pti_conserves_activity(samples, pti):
+    """Property: PTI binning conserves total activity (Power-EM spatial +
+    temporal capture loses nothing)."""
+    tr = Tracer()
+    total = 0.0
+    for t0, dur, amount in samples:
+        tr.emit("m", "ops", t0, t0 + dur, amount)
+        total += amount
+    bins = tr.pti_activity("m", "ops", pti=pti)
+    assert sum(bins) == pytest.approx(total, rel=1e-6)
+
+
+def test_leakage_lut_monotonic():
+    lut = LeakageLUT()
+    assert lut.lookup(25, 0.7) < lut.lookup(85, 0.7)
+    assert lut.lookup(60, 0.6) < lut.lookup(60, 1.0)
+
+
+def test_vf_curve_monotonic():
+    vf = VFCurve()
+    vs = [vf.f2v(f) for f in (0.3, 0.6, 0.94, 1.2)]
+    assert vs == sorted(vs)
+    assert vf.f2v(0.94, 105) > vf.f2v(0.94, 25)
+
+
+def test_power_char_utilization_scaling():
+    ch = DEFAULT_CHARS["mxu"]
+    p0 = ch.total_w(0.94, 0.0)
+    p1 = ch.total_w(0.94, 1.0)
+    assert p1 > p0 > 0
+    # dynamic part scales linearly in utilization
+    pm = ch.total_w(0.94, 0.5)
+    assert pm == pytest.approx((p0 + p1) / 2, rel=1e-6)
+
+
+def test_power_super_linear_in_freq():
+    """Fig 6: power grows faster than frequency (V^2 term)."""
+    ch = DEFAULT_CHARS["mxu"]
+    p_low = ch.dynamic_w(0.5, 1.0)
+    p_high = ch.dynamic_w(1.0, 1.0)
+    assert p_high / p_low > 2.0   # > linear scaling
+
+
+def test_powerem_integration():
+    tr = Tracer()
+    cfg = V5E
+    # mxu at 50% of peak MAC rate for 1us, then idle 1us
+    half_rate = cfg.macs * cfg.clock_ghz * 0.5
+    tr.emit("tile0.mxu", "ops", 0, 1000, half_rate * 1000)
+    pem = PowerEM(cfg, n_tiles=1)
+    rep = pem.analyze(tr, pti_ns=1000, t_end_ns=2000)
+    u = rep.util["tile0.mxu"]
+    assert u[0] == pytest.approx(0.5, rel=1e-3)
+    assert u[1] == 0.0
+    assert rep.series["tile0.mxu"][0] > rep.series["tile0.mxu"][1]
+    assert rep.peak_w >= rep.avg_w > 0
+
+
+def test_power_tree_scales_with_hw_size():
+    small = build_power_tree(paper_skew())
+    big = build_power_tree(V5E)
+
+    def peak(tree):
+        return sum(n.scale * n.char.total_w(0.94, 1.0) for n in tree.walk()
+                   if not n.children)
+
+    assert peak(small) < 0.25 * peak(big)

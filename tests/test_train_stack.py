@@ -1,0 +1,165 @@
+"""Optimizer, schedules, gradient compression, checkpoint/restart, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import REGISTRY, SHAPES
+from repro.models import build_model
+from repro.train.checkpoint import (CheckpointManager, latest_step,
+                                    restore_checkpoint, save_checkpoint)
+from repro.train.compress import (compression_ratio, dequantize_int8,
+                                  ef_compress_grads, ef_init, quantize_int8)
+from repro.train.data import SyntheticData
+from repro.train.loop import init_state, make_train_step
+from repro.train.optim import (adamw_init, adamw_update, cosine_schedule,
+                               global_norm, wsd_schedule)
+
+
+def test_adamw_converges_quadratic():
+    key = jax.random.PRNGKey(0)
+    target = jax.random.normal(key, (16, 16))
+    params = {"w": jnp.zeros((16, 16))}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, jnp.asarray(0.05),
+                                   weight_decay=0.0)
+    assert float(loss(params)) < 0.01 * l0
+
+
+def test_wsd_schedule_shape():
+    lr = wsd_schedule(1e-3, warmup=100, total=1000, decay_frac=0.1)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(100))) == pytest.approx(1e-3)
+    assert float(lr(jnp.asarray(500))) == pytest.approx(1e-3)  # stable
+    assert float(lr(jnp.asarray(1000))) < 2e-5                 # decayed
+
+
+def test_cosine_schedule_monotone_after_peak():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    vals = [float(lr(jnp.asarray(s))) for s in (10, 40, 70, 100)]
+    assert vals == sorted(vals, reverse=True)
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=1, max_size=500))
+@settings(max_examples=40, deadline=None)
+def test_quantization_error_bound(vals):
+    """Property: per-block int8 error <= scale/2 = max|block|/254."""
+    x = jnp.asarray(np.asarray(vals, np.float32))
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s, x.shape, jnp.float32)
+    err = np.abs(np.asarray(deq - x))
+    blocks = np.asarray(jnp.pad(x, (0, (-len(vals)) % 256)).reshape(-1, 256))
+    bound = np.abs(blocks).max(-1) / 127.0 * 0.5 + 1e-7
+    assert (err.reshape(-1) <= np.repeat(bound, 256)[:err.size] + 1e-6).all()
+
+
+def test_error_feedback_convergence():
+    """EF-compressed SGD matches uncompressed convergence on a quadratic."""
+    key = jax.random.PRNGKey(1)
+    target = {"w": jax.random.normal(key, (64, 64))}
+
+    def loss(p):
+        return 0.5 * jnp.sum((p["w"] - target["w"]) ** 2)
+
+    def run(compressed):
+        p = {"w": jnp.zeros((64, 64))}
+        ef = ef_init(p)
+        for _ in range(60):
+            g = jax.grad(loss)(p)
+            if compressed:
+                g, ef = ef_compress_grads(g, ef)
+            p = jax.tree_util.tree_map(lambda a, b: a - 0.1 * b, p, g)
+        return float(loss(p))
+
+    assert run(True) < 1.05 * run(False) + 1e-3
+
+
+def test_compression_ratio():
+    assert compression_ratio(jnp.bfloat16) < 0.55
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    cfg = REGISTRY["smollm-135m"].reduced()
+    model = build_model(cfg, remat=False)
+    state = init_state(model, jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 10, state, data_cursor=10)
+    save_checkpoint(d, 20, state, data_cursor=20)
+    assert latest_step(d) == 20
+    restored, cursor, _ = restore_checkpoint(d, 20, state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert cursor == 20
+
+    mgr = CheckpointManager(d, save_every=1, keep=2, async_save=False)
+    for s in (30, 40, 50):
+        mgr.maybe_save(s, state, data_cursor=s)
+    mgr.wait()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                   if n.startswith("step_"))
+    assert steps == [40, 50]
+
+
+def test_restart_resumes_bit_identical():
+    """Fault-tolerance runbook: kill after step k, restore, continue ->
+    identical final loss as the uninterrupted run."""
+    cfg = REGISTRY["smollm-135m"].reduced()
+    model = build_model(cfg, remat=False)
+    data = SyntheticData(cfg, SHAPES["train_4k"], seed=3,
+                         batch_override=2, seq_override=16)
+    step_fn = make_train_step(model, None)
+
+    def run(n, state=None, start=0):
+        if state is None:
+            state = init_state(model, jax.random.PRNGKey(0))
+        losses = []
+        for s in range(start, n):
+            state, m = step_fn(state, data.batch_at(s))
+            losses.append(float(m["loss"]))
+        return state, losses
+
+    _, straight = run(6)
+    state3, part1 = run(3)
+    # simulate restart: checkpoint via host round-trip
+    host = jax.tree_util.tree_map(lambda x: np.asarray(x), state3)
+    state3b = jax.tree_util.tree_map(jnp.asarray, host)
+    _, part2 = run(6, state=state3b, start=3)
+    np.testing.assert_allclose(straight, part1 + part2, rtol=1e-6)
+
+
+def test_data_cursor_determinism():
+    cfg = REGISTRY["qwen2-1.5b"].reduced()
+    data = SyntheticData(cfg, SHAPES["train_4k"], seed=7,
+                         batch_override=2, seq_override=16)
+    b1 = data.batch_at(41)
+    b2 = data.batch_at(41)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(data.batch_at(42)["tokens"]))
+
+
+def test_train_step_with_compression_and_microbatches():
+    cfg = REGISTRY["smollm-135m"].reduced()
+    model = build_model(cfg, remat=False)
+    state = init_state(model, jax.random.PRNGKey(0), compress=True)
+    step_fn = make_train_step(model, None, microbatches=2, compress=True)
+    data = SyntheticData(cfg, SHAPES["train_4k"], seed=0,
+                         batch_override=4, seq_override=16)
+    state, m = step_fn(state, data.batch_at(0))
+    assert np.isfinite(float(m["loss"]))
+    # error-feedback state is being populated
+    efn = global_norm(state["ef"])
+    assert float(efn) > 0
