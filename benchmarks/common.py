@@ -7,6 +7,19 @@ import time
 from typing import Any, Dict, List
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+CAMPAIGN_DIR = os.path.join(ART_DIR, "campaigns")
+SWEEP_CACHE_DIR = os.path.join(ART_DIR, "sweep_cache")
+
+
+def run_and_save_campaign(spec, *, workers=None, use_cache=True):
+    """Drive one sweep campaign with the shared benchmarks cache and
+    archive its records under ``artifacts/campaigns/<name>.json``."""
+    from repro.sweep.runner import run_campaign, save_result
+
+    res = run_campaign(spec, workers=workers, use_cache=use_cache,
+                       cache_dir=SWEEP_CACHE_DIR)
+    save_result(res, os.path.join(CAMPAIGN_DIR, f"{spec.name}.json"))
+    return res
 
 
 def art_path(*parts: str) -> str:

@@ -1,27 +1,43 @@
-"""Fig 5 analog: computation scaling — tiles 1/2/4 x MAC array 2K/4K."""
+"""Fig 5 analog: computation scaling — tiles 1/2/4 x MAC array 2K/4K.
+
+A thin sweep spec over the campaign runner: the MXU-count axis is
+analytic, the tile-count axis is structural (one pre-screen per tile
+topology), and every point is event-refined for the figure.
+"""
 from __future__ import annotations
 
-from repro.graph.compiler import CompileOptions, compile_ops
+from typing import Optional
+
 from repro.graph.workloads import WORKLOADS
-from repro.hw.chip import simulate
-from repro.hw.presets import paper_skew
+from repro.sweep import RefineSpec, SweepSpec
 
-from .common import save_json
+from .common import run_and_save_campaign, save_json
+
+MACS_TAG = {1: "2K", 2: "4K"}
 
 
-def run() -> dict:
+def campaign_spec() -> SweepSpec:
+    return SweepSpec(
+        name="computation_scaling",
+        description="Fig 5: tile count x MAC-array size scaling",
+        workloads=list(WORKLOADS),
+        preset="paper_skew",
+        axes={"n_mxu": list(MACS_TAG)},
+        n_tiles=[1, 2, 4],
+        refine=RefineSpec(mode="all"),
+    )
+
+
+def run(workers: Optional[int] = None) -> dict:
+    res = run_and_save_campaign(campaign_spec(), workers=workers)
+    by_key = {(r["workload"], r["n_tiles"], r["overrides"]["n_mxu"]): r
+              for r in res.refined}
     rows = []
-    for wname, builder in WORKLOADS.items():
-        ops = builder()
-        base = None
-        for n_mxu, macs_tag in ((1, "2K"), (2, "4K")):
+    for wname in WORKLOADS:
+        base = by_key[(wname, 1, 1)]["inf_per_s"]
+        for n_mxu, macs_tag in MACS_TAG.items():
             for nt in (1, 2, 4):
-                cfg = paper_skew(n_mxu=n_mxu)
-                cw = compile_ops(ops, cfg, CompileOptions(n_tiles=nt))
-                t = simulate(cw.tasks, cfg, n_tiles=nt).makespan_ns
-                fps = 1e9 / t
-                if base is None:
-                    base = fps
+                fps = by_key[(wname, nt, n_mxu)]["inf_per_s"]
                 rows.append({"model": wname, "tiles": nt, "macs": macs_tag,
                              "inf_per_s": fps, "speedup_vs_1t2K": fps / base})
     save_json("computation_scaling.json", rows)
@@ -39,7 +55,7 @@ def run() -> dict:
         "avg_gain_2K_to_4K_macs": sum(fmac) / len(fmac),
     }
     save_json("computation_scaling_summary.json", summary)
-    return {"rows": rows, "summary": summary}
+    return {"rows": rows, "summary": summary, "campaign": res.summary}
 
 
 def main(print_csv=True):

@@ -1,29 +1,51 @@
 """Fig 9 analog: joint perf/power across models x operating frequencies,
-plus the battery-life DVFS policy pick (lowest energy meeting a floor)."""
+plus the battery-life DVFS policy pick (lowest energy meeting a floor).
+
+Now a thin sweep spec over the campaign runner (``repro.sweep``): the
+frequency axis is refined in full on the event engine (mode="all", the
+figure needs ground truth at every point), in parallel workers behind the
+shared result cache — re-running the benchmark suite is incremental.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
-from repro.graph.compiler import CompileOptions, compile_ops
 from repro.graph.workloads import WORKLOADS
-from repro.hw.presets import paper_skew
-from repro.power.dvfs import choose_operating_point, sweep
+from repro.power.dvfs import DvfsPoint, choose_operating_point
+from repro.sweep import RefineSpec, SweepSpec
 
-from .common import save_json
+from .common import run_and_save_campaign, save_json
+
+FREQS = [round(f, 1) for f in np.arange(0.3, 1.25, 0.1)]  # 100MHz steps
 
 
-def run() -> dict:
-    cfg = paper_skew()
-    freqs = [round(f, 1) for f in np.arange(0.3, 1.25, 0.1)]  # 100MHz steps
+def campaign_spec() -> SweepSpec:
+    return SweepSpec(
+        name="dvfs_sweep",
+        description="Fig 9: joint perf/power DVFS policy, all workloads",
+        workloads=list(WORKLOADS),
+        preset="paper_skew",
+        axes={"clock_ghz": FREQS},
+        n_tiles=[2],
+        refine=RefineSpec(mode="all"),
+    )
+
+
+def _points(records, wname):
+    recs = sorted((r for r in records
+                   if r["workload"] == wname and r["refined"]),
+                  key=lambda r: r["overrides"]["clock_ghz"])
+    return [DvfsPoint.from_record(r) for r in recs]
+
+
+def run(workers: Optional[int] = None) -> dict:
+    res = run_and_save_campaign(campaign_spec(), workers=workers)
     all_rows = {}
     picks = {}
-    for wname, builder_fn in WORKLOADS.items():
-        ops = builder_fn()
-
-        def builder(c):
-            return compile_ops(ops, c, CompileOptions(n_tiles=2)).tasks
-
-        pts = sweep(builder, cfg, freqs, n_tiles=2)
+    for wname in WORKLOADS:
+        pts = _points(res.records, wname)
         all_rows[wname] = [p.__dict__ for p in pts]
         floor = 0.5 * max(p.inf_per_s for p in pts)
         pick = choose_operating_point(pts, floor)
@@ -31,7 +53,7 @@ def run() -> dict:
                         "freq_ghz": pick.freq_ghz if pick else None,
                         "avg_w": pick.avg_w if pick else None}
     save_json("dvfs_sweep.json", {"rows": all_rows, "picks": picks})
-    return {"rows": all_rows, "picks": picks}
+    return {"rows": all_rows, "picks": picks, "campaign": res.summary}
 
 
 def main(print_csv=True):

@@ -1,37 +1,50 @@
-"""Fig 6 analog: performance + power vs clock frequency (joint analysis)."""
+"""Fig 6 analog: performance + power vs clock frequency (joint analysis).
+
+A thin sweep spec over the campaign runner: one frequency axis on
+ResNet50, fully event-refined (shares cached points with the dvfs_sweep
+campaign — same workload, tiles and operating points).
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
-from repro.graph.compiler import CompileOptions, compile_ops
-from repro.graph.workloads import resnet50
-from repro.hw.presets import paper_skew
-from repro.power.dvfs import sweep
+from repro.power.dvfs import DvfsPoint
+from repro.sweep import RefineSpec, SweepSpec
 
-from .common import save_json
+from .common import run_and_save_campaign, save_json
+
+FREQS = [round(f, 2) for f in np.arange(0.3, 1.25, 0.1)]
 
 
-def run() -> dict:
-    cfg = paper_skew()
-    ops = resnet50()
+def campaign_spec() -> SweepSpec:
+    return SweepSpec(
+        name="frequency_scaling",
+        description="Fig 6: perf ~linear, power superlinear in F",
+        workloads=["resnet50"],
+        preset="paper_skew",
+        axes={"clock_ghz": FREQS},
+        n_tiles=[2],
+        refine=RefineSpec(mode="all"),
+    )
 
-    def builder(c):
-        return compile_ops(ops, c, CompileOptions(n_tiles=2)).tasks
 
-    freqs = [round(f, 2) for f in np.arange(0.3, 1.25, 0.1)]
-    pts = sweep(builder, cfg, freqs, n_tiles=2)
-    rows = [p.__dict__ for p in pts]
+def run(workers: Optional[int] = None) -> dict:
+    res = run_and_save_campaign(campaign_spec(), workers=workers)
+    recs = sorted(res.refined, key=lambda r: r["overrides"]["clock_ghz"])
+    rows = [DvfsPoint.from_record(r).__dict__ for r in recs]
     save_json("frequency_scaling.json", rows)
     # paper claims: perf ~linear in F; power superlinear (V^2)
-    perf_ratio = pts[-1].inf_per_s / pts[0].inf_per_s
-    power_ratio = pts[-1].avg_w / pts[0].avg_w
-    freq_ratio = pts[-1].freq_ghz / pts[0].freq_ghz
+    perf_ratio = rows[-1]["inf_per_s"] / rows[0]["inf_per_s"]
+    power_ratio = rows[-1]["avg_w"] / rows[0]["avg_w"]
+    freq_ratio = rows[-1]["freq_ghz"] / rows[0]["freq_ghz"]
     summary = {"freq_ratio": freq_ratio, "perf_ratio": perf_ratio,
                "power_ratio": power_ratio,
-               "efficiency_best_at_ghz": min(
-                   pts, key=lambda p: 1.0 / max(p.inf_per_j, 1e-9)).freq_ghz}
+               "efficiency_best_at_ghz": max(
+                   rows, key=lambda r: r["inf_per_j"])["freq_ghz"]}
     save_json("frequency_scaling_summary.json", summary)
-    return {"rows": rows, "summary": summary}
+    return {"rows": rows, "summary": summary, "campaign": res.summary}
 
 
 def main(print_csv=True):

@@ -1,26 +1,43 @@
-"""Fig 7 analog: memory-BW scaling x compute-buffer capacity."""
+"""Fig 7 analog: memory-BW scaling x compute-buffer capacity.
+
+A thin sweep spec over the campaign runner: the bandwidth axis is
+analytic (one XLA pre-screen per VMEM cell), the VMEM-capacity axis is
+structural (it changes tiling/spill decisions), and every point is
+event-refined for the figure.
+"""
 from __future__ import annotations
 
-from repro.graph.compiler import CompileOptions, compile_ops
+from typing import Optional
+
 from repro.graph.workloads import WORKLOADS
-from repro.hw.chip import simulate
-from repro.hw.presets import paper_skew
+from repro.sweep import RefineSpec, SweepSpec
 
-from .common import save_json
+from .common import run_and_save_campaign, save_json
+
+BANDWIDTHS = [8.0, 17.0, 34.0, 68.0]
+CB_SIZES = {2 * 2**20: "small_CB", 16 * 2**20: "large_CB"}
 
 
-def run() -> dict:
-    rows = []
-    for wname, builder in WORKLOADS.items():
-        ops = builder()
-        for vmem_mb, tag in ((2, "small_CB"), (16, "large_CB")):
-            for bw in (8.0, 17.0, 34.0, 68.0):
-                cfg = paper_skew(hbm_gbps=bw, vmem_bytes=vmem_mb * 2**20)
-                cw = compile_ops(ops, cfg, CompileOptions(n_tiles=2))
-                t = simulate(cw.tasks, cfg, n_tiles=2).makespan_ns
-                rows.append({"model": wname, "cb": tag, "ddr_gbps": bw,
-                             "inf_per_s": 1e9 / t,
-                             "spilled_layers": cw.spilled_layers})
+def campaign_spec() -> SweepSpec:
+    return SweepSpec(
+        name="membw_scaling",
+        description="Fig 7: DDR/HBM bandwidth x CB capacity",
+        workloads=list(WORKLOADS),
+        preset="paper_skew",
+        axes={"vmem_bytes": list(CB_SIZES), "hbm_gbps": BANDWIDTHS},
+        n_tiles=[2],
+        refine=RefineSpec(mode="all"),
+    )
+
+
+def run(workers: Optional[int] = None) -> dict:
+    res = run_and_save_campaign(campaign_spec(), workers=workers)
+    rows = [{"model": r["workload"],
+             "cb": CB_SIZES[r["overrides"]["vmem_bytes"]],
+             "ddr_gbps": r["overrides"]["hbm_gbps"],
+             "inf_per_s": r["inf_per_s"],
+             "spilled_layers": r["spilled_layers"]}
+            for r in res.refined]
     save_json("membw_scaling.json", rows)
     # headline: BW sensitivity (8 -> 68 GB/s) per CB size
     sens = {}
@@ -31,7 +48,7 @@ def run() -> dict:
               and r["ddr_gbps"] == 68.0]
         sens[tag] = sum(h / l for h, l in zip(hi, lo)) / len(lo)
     save_json("membw_scaling_summary.json", sens)
-    return {"rows": rows, "summary": sens}
+    return {"rows": rows, "summary": sens, "campaign": res.summary}
 
 
 def main(print_csv=True):

@@ -1,33 +1,43 @@
-"""Fig 8 analog: per-module transient power over PTI bins for one model."""
+"""Fig 8 analog: per-module transient power over PTI bins for one model.
+
+A single-point campaign with ``keep_series=True``: the runner's cache
+makes the (relatively slow) full ResNet50 event run + Power-EM trace
+incremental across benchmark invocations.
+"""
 from __future__ import annotations
 
-from repro.graph.compiler import CompileOptions, compile_ops
-from repro.graph.workloads import resnet50
-from repro.hw.chip import System
-from repro.hw.presets import paper_skew
-from repro.power.powerem import PowerEM
+from typing import Optional
 
-from .common import save_json
+from repro.sweep import RefineSpec, SweepSpec
+
+from .common import run_and_save_campaign, save_json
 
 
-def run(pti_ns: float = 20_000.0) -> dict:
-    cfg = paper_skew()
-    ops = resnet50()
-    cw = compile_ops(ops, cfg, CompileOptions(n_tiles=2))
-    sysm = System(cfg, n_tiles=2)
-    rep = sysm.run_workload(cw.tasks)
-    pem = PowerEM(cfg, n_tiles=2)
-    prep = pem.analyze(sysm.tracer, pti_ns=pti_ns)
+def campaign_spec(pti_ns: float = 20_000.0) -> SweepSpec:
+    return SweepSpec(
+        name="power_profile",
+        description="Fig 8: per-module transient power (PTI-resolved)",
+        workloads=["resnet50"],
+        preset="paper_skew",
+        axes={},
+        n_tiles=[2],
+        refine=RefineSpec(mode="all", pti_ns=pti_ns, keep_series=True),
+    )
+
+
+def run(pti_ns: float = 20_000.0, workers: Optional[int] = 0) -> dict:
+    res = run_and_save_campaign(campaign_spec(pti_ns), workers=workers)
+    (rec,) = res.refined
     out = {
         "pti_ns": pti_ns,
-        "makespan_ms": rep.makespan_ns / 1e6,
-        "series_w": prep.series,
-        "peak_w": prep.peak_w,
-        "avg_w": prep.avg_w,
-        "energy_mj_per_inf": prep.energy_j() * 1e3,
+        "makespan_ms": rec["time_ns"] / 1e6,
+        "series_w": rec["series_w"],
+        "peak_w": rec["peak_w"],
+        "avg_w": rec["avg_w"],
+        "energy_mj_per_inf": rec["energy_j"] * 1e3,
     }
     save_json("power_profile.json", out)
-    return out
+    return {**out, "campaign": res.summary}
 
 
 def main(print_csv=True):

@@ -177,6 +177,50 @@ def paper_validation_section() -> str:
     return "\n".join(lines)
 
 
+def campaign_section() -> str:
+    """Render every archived sweep campaign (repro.sweep records)."""
+    paths = sorted(glob.glob(os.path.join(ART_DIR, "campaigns", "*.json")))
+    if not paths:
+        return ""
+    lines = ["## §Sweep campaigns", ""]
+    lines.append(
+        "Design-space campaigns run by the `repro.sweep` subsystem: the "
+        "full grid is pre-screened analytically in one batched XLA call "
+        "per structural cell (`core.vectorized.schedule_many_stats`), the "
+        "Pareto-interesting points are refined on the ground-truth event "
+        "engine in parallel workers, and refinements are content-hash "
+        "cached so re-runs are incremental.")
+    lines.append("")
+    lines.append("| campaign | grid | cells | refined | cache hits | "
+                 "prescreen_s | refine_s | event/analytic | "
+                 "best point (min time) |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for p in paths:
+        with open(p) as f:
+            d = json.load(f)
+        s = d["summary"]
+        dev = "—"
+        if s.get("deviation_max") is not None:
+            dev = f"{s['deviation_min']:.2f}–{s['deviation_max']:.2f}"
+        best = "—"
+        if "best_time_point" in s:
+            b = s["best_time_point"]
+            ov = ",".join(f"{k}={v:g}" if isinstance(v, float)
+                          else f"{k}={v}" for k, v in b["overrides"].items())
+            best = f"{b['workload']} {ov or 'base'}"
+        lines.append(
+            f"| {d['spec']['name']} | {s['grid_points']} | {s['cells']} | "
+            f"{s['refined']} | {s['cache_hits']} | {s['prescreen_s']:.2f} | "
+            f"{s['refine_s']:.2f} | {dev} | {best} |")
+    lines.append("")
+    lines.append(
+        "The event/analytic column bounds the pre-screen's fidelity on the "
+        "refined points (the `core/vectorized` deviation-bound tests "
+        "assert the same corridor). Run any campaign with "
+        "`PYTHONPATH=src python -m repro.sweep run <spec>`.")
+    return "\n".join(lines)
+
+
 def perf_delta_section() -> str:
     rows = _load("perf_delta.json")
     if not rows:
@@ -235,6 +279,10 @@ def main():
     print()
     print(dryrun_section())
     print()
+    cs = campaign_section()
+    if cs:
+        print(cs)
+        print()
     print(roofline_section())
     print()
     print(PERF_BODY)

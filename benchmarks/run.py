@@ -53,7 +53,20 @@ def main() -> int:
     print(csv_row("power_avg_w", pp["avg_w"]))
 
     print("\n== dvfs_sweep (Fig 9) ==")
-    dvfs_sweep.main()
+    dv = dvfs_sweep.main()
+
+    print("\n== sweep campaigns (repro.sweep runner) ==")
+    campaigns = [out["campaign"] for out in (cs, fs, ms, pp, dv)
+                 if "campaign" in out]
+    print(csv_row("campaign_grid_points",
+                  sum(s["grid_points"] for s in campaigns),
+                  "analytic pre-screen (batched XLA)"))
+    print(csv_row("campaign_refined",
+                  sum(s["refined"] for s in campaigns),
+                  "event-engine ground truth"))
+    print(csv_row("campaign_cache_hits",
+                  sum(s["cache_hits"] for s in campaigns),
+                  "incremental re-runs"))
 
     print("\n== accuracy_characterization (Table 1) ==")
     ac = accuracy_characterization.main()

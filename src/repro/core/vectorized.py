@@ -29,12 +29,14 @@ from ..hw.presets import HwConfig
 from ..hw.vecunit import VecSpec
 
 __all__ = ["TaskArrays", "from_tasks", "params_of", "schedule",
-           "schedule_many", "PARAM_NAMES"]
+           "schedule_many", "schedule_stats", "schedule_many_stats",
+           "PARAM_NAMES", "N_ENGINE_CLASSES"]
 
 MAX_DEPS = 8
 
 # engine classes for the duration model
 ENG_MXU, ENG_VPU, ENG_DMA, ENG_ICI = 0, 1, 2, 3
+N_ENGINE_CLASSES = 4
 
 PARAM_NAMES = ("macs", "clock_ghz", "vpu_flops_per_cycle", "hbm_gbps",
                "dma_overhead_ns", "ici_link_gbps", "ici_latency_ns",
@@ -186,3 +188,26 @@ def schedule_many(arrays: TaskArrays, param_matrix: np.ndarray) -> np.ndarray:
     """vmap over K parameter vectors -> K makespans in one XLA call."""
     fn = jax.jit(jax.vmap(lambda p: schedule(arrays, p)))
     return np.asarray(fn(jnp.asarray(param_matrix)))
+
+
+def schedule_stats(arrays: TaskArrays,
+                   params: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Makespan + per-engine-class busy time under one parameter vector.
+
+    The busy vector (``[N_ENGINE_CLASSES]``, summed task durations per
+    class) is what the sweep pre-screen feeds the analytic Power-EM proxy:
+    utilization(class) = busy / makespan, no event simulation needed.
+    """
+    dur = _durations(arrays, jnp.asarray(params))
+    cls = jnp.asarray(arrays.engine_class)
+    busy = jnp.zeros(N_ENGINE_CLASSES).at[cls].add(dur)
+    return schedule(arrays, params), busy
+
+
+def schedule_many_stats(arrays: TaskArrays, param_matrix: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """vmap over K parameter vectors -> (K makespans, [K, 4] busy times)
+    in one XLA call — the sweep campaign's batched pre-screen."""
+    fn = jax.jit(jax.vmap(lambda p: schedule_stats(arrays, p)))
+    mk, busy = fn(jnp.asarray(param_matrix))
+    return np.asarray(mk), np.asarray(busy)

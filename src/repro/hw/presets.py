@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 __all__ = ["HwConfig", "V5E", "V5E_HALF_MACS", "paper_skew", "from_dict",
-           "to_dict"]
+           "to_dict", "PRESETS", "resolve_preset"]
 
 
 @dataclass(frozen=True)
@@ -124,6 +124,25 @@ def paper_skew(**kw) -> HwConfig:
         queue_depth=8,
     )
     return base.replace(**kw)
+
+
+# named base points for declarative sweep specs (repro.sweep)
+PRESETS: Dict[str, Any] = {
+    "v5e": lambda **kw: V5E.replace(**kw) if kw else V5E,
+    "v5e-half": lambda **kw: V5E_HALF_MACS.replace(**kw) if kw
+    else V5E_HALF_MACS,
+    "paper_skew": paper_skew,
+}
+
+
+def resolve_preset(name: str, **overrides) -> HwConfig:
+    """Preset name + field overrides -> HwConfig (sweep-spec entrypoint)."""
+    try:
+        factory = PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown hw preset {name!r}; "
+                       f"have {sorted(PRESETS)}") from None
+    return factory(**overrides)
 
 
 def to_dict(cfg: HwConfig) -> Dict[str, Any]:

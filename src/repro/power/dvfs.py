@@ -32,6 +32,16 @@ class DvfsPoint:
     energy_j: float
     inf_per_j: float
 
+    @classmethod
+    def from_record(cls, rec: dict) -> "DvfsPoint":
+        """One refined sweep-campaign record (repro.sweep) -> DvfsPoint.
+        The campaign's clock axis is the operating frequency."""
+        return cls(freq_ghz=rec["overrides"]["clock_ghz"],
+                   volt=rec["volt"], time_ns=rec["time_ns"],
+                   inf_per_s=rec["inf_per_s"], avg_w=rec["avg_w"],
+                   peak_w=rec["peak_w"], energy_j=rec["energy_j"],
+                   inf_per_j=rec["inf_per_j"])
+
 
 def sweep(task_builder: Callable[[HwConfig], Sequence[Task]],
           cfg: HwConfig, freqs_ghz: Sequence[float], *, n_tiles: int = 1,

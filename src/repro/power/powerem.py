@@ -22,7 +22,8 @@ from ..core import Tracer
 from ..hw.presets import HwConfig
 from .characterization import DEFAULT_CHARS, NOMINAL_TEMP_C, PowerChar
 
-__all__ = ["PowerNode", "build_power_tree", "PowerEM", "PowerReport"]
+__all__ = ["PowerNode", "build_power_tree", "PowerEM", "PowerReport",
+           "analytic_power_w"]
 
 
 @dataclass
@@ -100,6 +101,32 @@ def build_power_tree(cfg: HwConfig, n_tiles: int = 1) -> PowerNode:
                       max_rate_per_ns=cfg.ici_link_gbps * cfg.ici_links),
         ])
     return root
+
+
+def analytic_power_w(cfg: HwConfig, util: Dict[str, float], *,
+                     n_tiles: int = 1, freq_ghz: Optional[float] = None,
+                     temp_c: float = NOMINAL_TEMP_C) -> float:
+    """Whole-run average chip power from coarse per-module utilizations.
+
+    The sweep pre-screen has no tracer — only the analytic scheduler's
+    per-engine-class busy fractions. This walks the same characterized
+    power tree as ``PowerEM`` but applies one flat utilization per module
+    family (keys of ``util``: ``mxu``/``vpu``/``vmem``/``hbm``/``dma``/
+    ``ici``/``noc``; missing keys default to 0). Used to rank grid points
+    (Pareto energy axis); the event-engine refinement replaces it with the
+    PTI-resolved number.
+    """
+    f = freq_ghz if freq_ghz is not None else cfg.clock_ghz
+    tree = build_power_tree(cfg, n_tiles)
+    total = 0.0
+    for node in tree.walk():
+        if node.scale <= 0.0 and node.children:
+            continue
+        family = node.name.rsplit(".", 1)[-1] if "." in node.name \
+            else node.name
+        u = util.get(family, 0.0) if node.name != "chip" else 1.0
+        total += node.scale * node.char.total_w(f, u, temp_c)
+    return total
 
 
 @dataclass

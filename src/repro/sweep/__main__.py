@@ -1,0 +1,125 @@
+"""Sweep-campaign CLI.
+
+  python -m repro.sweep run <spec.json | builtin-name> [options]
+  python -m repro.sweep list
+  python -m repro.sweep show <builtin-name>
+
+``run`` prints a per-phase progress log, a ``name,value`` CSV summary
+block, and writes the campaign record JSON (default:
+``benchmarks/artifacts/campaigns/<name>.json`` when run from the repo
+root, else ``./<name>.campaign.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .runner import run_campaign, save_result
+from .spec import builtin_spec_names, load_builtin_spec, load_spec
+
+DEFAULT_CAMPAIGN_DIR = os.path.join("benchmarks", "artifacts", "campaigns")
+DEFAULT_CACHE_DIR = os.path.join("benchmarks", "artifacts", "sweep_cache")
+
+
+def _default_out(name: str) -> str:
+    if os.path.isdir("benchmarks"):
+        return os.path.join(DEFAULT_CAMPAIGN_DIR, f"{name}.json")
+    return f"{name}.campaign.json"
+
+
+def _load_spec(name: str):
+    """Load + validate a spec; returns None after printing a clean
+    one-line error (bad name/path, unknown field, bad axis...)."""
+    try:
+        return load_spec(name)
+    except (FileNotFoundError, KeyError, ValueError) as e:
+        msg = e.args[0] if e.args else e   # KeyError reprs its arg
+        print(f"error: {msg}", file=sys.stderr)
+        return None
+
+
+def cmd_run(args: argparse.Namespace) -> int:
+    spec = _load_spec(args.spec)
+    if spec is None:
+        return 2
+    if args.refine_mode:
+        spec.refine.mode = args.refine_mode
+    cache_dir = None
+    if not args.no_cache:
+        cache_dir = args.cache_dir or spec.cache_dir or DEFAULT_CACHE_DIR
+    res = run_campaign(spec, workers=args.workers,
+                       use_cache=not args.no_cache, cache_dir=cache_dir,
+                       progress=lambda m: print(f"  [{spec.name}] {m}"))
+    out = args.out or _default_out(spec.name)
+    save_result(res, out)
+    s = res.summary
+    print(f"campaign,{spec.name},")
+    print(f"grid_points,{s['grid_points']},{s['cells']} cells")
+    print(f"prescreen_s,{s['prescreen_s']:.3g},one XLA call per cell")
+    print(f"refined,{s['refined']},{s['cache_hits']} cache hits / "
+          f"{s['simulated']} simulated")
+    print(f"refine_s,{s['refine_s']:.3g},")
+    if s.get("deviation_max") is not None:
+        print(f"deviation_range,{s['deviation_min']:.3g},"
+              f"max {s['deviation_max']:.3g} (event/analytic)")
+    if "best_time_point" in s:
+        b = s["best_time_point"]
+        print(f"best_time_ns,{b['time_ns']:.6g},"
+              f"{b['workload']} {b['overrides']}")
+    print(f"artifact,{out},")
+    return 0
+
+
+def cmd_list(_args: argparse.Namespace) -> int:
+    names = builtin_spec_names()
+    if not names:
+        print("no builtin specs found")
+        return 1
+    for n in names:
+        spec = load_builtin_spec(n)
+        print(f"{n:>20s}  {spec.grid_size:5d} points  "
+              f"refine={spec.refine.mode:<7s} {spec.description}")
+    return 0
+
+
+def cmd_show(args: argparse.Namespace) -> int:
+    spec = _load_spec(args.spec)
+    if spec is None:
+        return 2
+    print(json.dumps(spec.to_dict(), indent=1))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sweep",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rp = sub.add_parser("run", help="execute a campaign")
+    rp.add_argument("spec", help="spec JSON path or builtin name")
+    rp.add_argument("--workers", type=int, default=None,
+                    help="refinement worker processes "
+                         "(default: one per core; 0 = inline)")
+    rp.add_argument("--no-cache", action="store_true",
+                    help="ignore + don't write the result cache")
+    rp.add_argument("--cache-dir", default=None)
+    rp.add_argument("--out", default=None, help="campaign JSON output path")
+    rp.add_argument("--refine-mode", choices=("pareto", "all", "none"),
+                    default=None, help="override the spec's refine mode")
+    rp.set_defaults(fn=cmd_run)
+
+    lp = sub.add_parser("list", help="list builtin campaign specs")
+    lp.set_defaults(fn=cmd_list)
+
+    sp = sub.add_parser("show", help="print a spec as JSON")
+    sp.add_argument("spec")
+    sp.set_defaults(fn=cmd_show)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

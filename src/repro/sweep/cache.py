@@ -1,0 +1,77 @@
+"""Content-hashed on-disk result cache for event-engine refinements.
+
+A refinement's inputs — workload name, full resolved ``HwConfig``, tile
+count, compile options, Power-EM settings — are canonicalized to JSON and
+hashed; the record is stored at ``<dir>/<hh>/<hash>.json``. Re-running a
+campaign (or a bigger campaign that overlaps a previous grid) only pays
+for the points it has never simulated. ``SCHEMA_VERSION`` is part of the
+key: bump it when event-engine or Power-EM semantics change and every
+cached record transparently invalidates.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+__all__ = ["ResultCache", "SCHEMA_VERSION", "content_key"]
+
+SCHEMA_VERSION = 1
+
+
+def content_key(payload: Dict[str, Any]) -> str:
+    """Canonical sha256 of a refinement-input payload."""
+    blob = json.dumps({"schema": SCHEMA_VERSION, **payload},
+                      sort_keys=True, default=float)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class ResultCache:
+    """Tiny sharded JSON store; safe under concurrent writers (atomic
+    rename, last-writer-wins — all writers produce identical content for
+    a given key by construction)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key + ".json")
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        p = self._path(key)
+        try:
+            with open(p) as f:
+                rec = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return rec
+
+    def put(self, key: str, record: Dict[str, Any]) -> str:
+        p = self._path(key)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(record, f, default=float)
+            os.replace(tmp, p)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return p
+
+    def __len__(self) -> int:
+        if not os.path.isdir(self.root):
+            return 0
+        n = 0
+        for shard in os.listdir(self.root):
+            d = os.path.join(self.root, shard)
+            if os.path.isdir(d):
+                n += sum(1 for f in os.listdir(d) if f.endswith(".json"))
+        return n

@@ -1,0 +1,58 @@
+"""Ground-truth refinement of one grid point (event engine + Power-EM).
+
+Kept in its own module with **no jax imports anywhere on its import
+path** so parallel refinement workers (``spawn`` context) start in
+milliseconds instead of re-initializing XLA per process.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from ..graph.compiler import CompileOptions, compile_ops
+from ..graph.workloads import WORKLOADS
+from ..hw.chip import System
+from ..hw.presets import from_dict
+from ..power.powerem import PowerEM
+
+__all__ = ["refine_point", "refine_payload"]
+
+
+def refine_payload(*, workload: str, n_tiles: int, hw: Dict[str, Any],
+                   compile_opts: Dict[str, Any], pti_ns: float,
+                   temp_c: float, keep_series: bool) -> Dict[str, Any]:
+    """The cache-keyed, process-picklable input of one refinement."""
+    return {"workload": workload, "n_tiles": n_tiles, "hw": hw,
+            "compile_opts": compile_opts, "pti_ns": pti_ns,
+            "temp_c": temp_c, "keep_series": keep_series}
+
+
+def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Compile + event-simulate + Power-EM one hardware point."""
+    cfg = from_dict(payload["hw"])
+    nt = payload["n_tiles"]
+    ops = WORKLOADS[payload["workload"]]()
+    cw = compile_ops(ops, cfg,
+                     CompileOptions(n_tiles=nt, **payload["compile_opts"]))
+    sysm = System(cfg, n_tiles=nt)
+    rep = sysm.run_workload(cw.tasks)
+    pem = PowerEM(cfg, n_tiles=nt, freq_ghz=cfg.clock_ghz,
+                  temp_c=payload["temp_c"])
+    prep = pem.analyze(sysm.tracer, pti_ns=payload["pti_ns"])
+    t = rep.makespan_ns
+    e = prep.energy_j()
+    rec = {
+        "time_ns": t,
+        "inf_per_s": 1e9 / t if t > 0 else 0.0,
+        "avg_w": prep.avg_w,
+        "peak_w": prep.peak_w,
+        "energy_j": e,
+        "inf_per_j": (1.0 / e) if e > 0 else 0.0,
+        "volt": pem.tree.char.vf.f2v(cfg.clock_ghz, payload["temp_c"]),
+        "n_tasks": rep.n_tasks,
+        "spilled_layers": cw.spilled_layers,
+        "total_flops": cw.total_flops,
+    }
+    if payload.get("keep_series"):
+        rec["series_w"] = prep.series
+        rec["pti_ns"] = prep.pti_ns
+    return rec

@@ -1,0 +1,245 @@
+"""Campaign runner: pre-screen -> select -> cached parallel refinement.
+
+``run_campaign`` is the one entrypoint every sweep benchmark drives:
+
+* expands the spec into structural cells,
+* pre-screens each cell's full analytic sub-grid in one batched XLA call,
+* selects the Pareto-interesting points per cell,
+* refines only those on the ground-truth event engine + Power-EM — in
+  parallel ``spawn`` worker processes (the refinement import path is
+  jax-free, see ``refine.py``) behind a content-hashed on-disk cache,
+* returns uniform JSON-ready campaign records that ``benchmarks/report``
+  renders and downstream analyses (DVFS policy picks, scaling summaries)
+  post-process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import multiprocessing as mp
+import os
+import time
+import warnings
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..hw.presets import to_dict
+from .cache import ResultCache, content_key
+from .pareto import select_points
+from .prescreen import prescreen_cell
+from .refine import refine_payload, refine_point
+from .spec import SweepSpec
+
+__all__ = ["CampaignResult", "run_campaign", "save_result", "load_result"]
+
+RESULT_SCHEMA = 1
+
+
+@dataclass
+class CampaignResult:
+    spec: Dict[str, Any]
+    records: List[Dict[str, Any]]
+    summary: Dict[str, Any]
+    schema: int = RESULT_SCHEMA
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @property
+    def refined(self) -> List[Dict[str, Any]]:
+        return [r for r in self.records if r["refined"]]
+
+    def best(self, key: str = "time_ns") -> Optional[Dict[str, Any]]:
+        refined = self.refined
+        if not refined:
+            return None
+        return min(refined, key=lambda r: r[key])
+
+
+def save_result(res: CampaignResult, path: str) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(res.to_dict(), f, indent=1, default=float)
+    return path
+
+
+def load_result(path: str) -> CampaignResult:
+    with open(path) as f:
+        d = json.load(f)
+    return CampaignResult(spec=d["spec"], records=d["records"],
+                          summary=d["summary"],
+                          schema=d.get("schema", RESULT_SCHEMA))
+
+
+def _log(progress: Optional[Callable[[str], None]], msg: str) -> None:
+    if progress:
+        progress(msg)
+
+
+def _mp_method() -> str:
+    """Worker start method. ``fork`` where available: refinement workers
+    never touch jax (see refine.py), fork skips the __main__ re-import
+    spawn needs and starts in ~ms. Override with SWEEP_MP_CONTEXT."""
+    env = os.environ.get("SWEEP_MP_CONTEXT")
+    if env:
+        return env
+    return "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+
+
+def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
+                 use_cache: bool = True,
+                 cache_dir: Optional[str] = None,
+                 progress: Optional[Callable[[str], None]] = None
+                 ) -> CampaignResult:
+    """Execute one campaign.
+
+    ``workers=0`` refines inline (deterministic, test-friendly);
+    ``workers=None`` uses one process per core; ``workers=N`` caps the
+    pool. The cache (``cache_dir`` or ``spec.cache_dir``) makes repeated
+    campaigns incremental; pass ``use_cache=False`` to force re-runs.
+    """
+    t_start = time.time()
+    cells = spec.cells()
+    cdir = cache_dir or spec.cache_dir
+    cache = ResultCache(cdir) if (use_cache and cdir) else None
+
+    # -- phase 1: batched analytic pre-screen (one XLA call per cell) ----
+    t0 = time.time()
+    screens = []
+    for cell in cells:
+        scr = prescreen_cell(cell)
+        screens.append(scr)
+        _log(progress, f"prescreen {cell.label}: {len(cell.points)} points "
+             f"in one XLA call ({scr.wall_s:.2f}s)")
+    prescreen_s = time.time() - t0
+
+    # -- phase 2: Pareto selection per cell ------------------------------
+    records: List[Dict[str, Any]] = []
+    todo: List[Dict[str, Any]] = []        # refinement payload per record
+    todo_idx: List[int] = []               # record index per payload
+    for scr in screens:
+        cell = scr.cell
+        obj = np.stack([scr.time_ns, scr.energy_j], axis=1)
+        picked = set(select_points(obj, mode=spec.refine.mode,
+                                   max_points=spec.refine.max_points))
+        for i, pt in enumerate(cell.points):
+            cfg = pt.cfg(spec)
+            rec: Dict[str, Any] = {
+                "point_id": pt.point_id(),
+                "campaign": spec.name,
+                "workload": pt.workload,
+                "n_tiles": pt.n_tiles,
+                "overrides": dict(pt.overrides),
+                "hw_name": cfg.name,
+                "analytic_time_ns": float(scr.time_ns[i]),
+                "analytic_inf_per_s": float(1e9 / scr.time_ns[i])
+                if scr.time_ns[i] > 0 else 0.0,
+                "analytic_avg_w": float(scr.avg_w[i]),
+                "analytic_energy_j": float(scr.energy_j[i]),
+                "selected": i in picked,
+                "refined": False,
+                "cached": False,
+            }
+            if i in picked:
+                payload = refine_payload(
+                    workload=pt.workload, n_tiles=pt.n_tiles,
+                    hw=to_dict(cfg), compile_opts=dict(spec.compile_opts),
+                    pti_ns=spec.refine.pti_ns, temp_c=spec.refine.temp_c,
+                    keep_series=spec.refine.keep_series)
+                todo.append(payload)
+                todo_idx.append(len(records))
+            records.append(rec)
+        _log(progress, f"select {cell.label}: {len(picked)}/"
+             f"{len(cell.points)} points for event-engine refinement")
+
+    # -- phase 3: cached, parallel event-engine refinement ---------------
+    t0 = time.time()
+    cache_hits = 0
+    misses: List[int] = []                 # indices into todo
+    results: List[Optional[Dict[str, Any]]] = [None] * len(todo)
+    keys = [content_key(p) for p in todo]
+    if cache is not None:
+        for i, key in enumerate(keys):
+            hit = cache.get(key)
+            if hit is not None:
+                results[i] = hit
+                records[todo_idx[i]]["cached"] = True
+                cache_hits += 1
+            else:
+                misses.append(i)
+    else:
+        misses = list(range(len(todo)))
+
+    if misses:
+        n_workers = workers if workers is not None else (os.cpu_count() or 1)
+        fresh: Optional[List[Dict[str, Any]]] = None
+        if n_workers and n_workers > 1 and len(misses) > 1:
+            try:
+                ctx = mp.get_context(_mp_method())
+                with warnings.catch_warnings():
+                    # jax warns about fork+threads; refinement workers
+                    # never re-enter jax/XLA (refine.py is jax-free)
+                    warnings.filterwarnings(
+                        "ignore", message=".*os.fork.*",
+                        category=RuntimeWarning)
+                    with ProcessPoolExecutor(
+                            max_workers=min(n_workers, len(misses)),
+                            mp_context=ctx) as pool:
+                        fresh = list(pool.map(refine_point,
+                                              [todo[i] for i in misses]))
+            except BrokenProcessPool:
+                # e.g. spawn re-importing an unguarded __main__ —
+                # refinement is pure, so just run inline
+                _log(progress, "worker pool unavailable; refining inline")
+                fresh = None
+        if fresh is None:
+            fresh = [refine_point(todo[i]) for i in misses]
+        for i, rec in zip(misses, fresh):
+            results[i] = rec
+            if cache is not None:
+                cache.put(keys[i], rec)
+    refine_s = time.time() - t0
+
+    deviations = []
+    for i, res in enumerate(results):
+        assert res is not None
+        rec = records[todo_idx[i]]
+        rec.update(res)
+        rec["refined"] = True
+        if rec["analytic_time_ns"] > 0:
+            rec["deviation"] = rec["time_ns"] / rec["analytic_time_ns"]
+            deviations.append(rec["deviation"])
+    _log(progress, f"refine: {len(todo)} points "
+         f"({cache_hits} cache hits, {len(misses)} simulated, "
+         f"{refine_s:.2f}s)")
+
+    summary = {
+        "grid_points": len(records),
+        "cells": len(cells),
+        "prescreen_calls": len(cells),
+        "refined": len(todo),
+        "cache_hits": cache_hits,
+        "simulated": len(misses),
+        "prescreen_s": prescreen_s,
+        "refine_s": refine_s,
+        "wall_s": time.time() - t_start,
+        "deviation_min": min(deviations) if deviations else None,
+        "deviation_max": max(deviations) if deviations else None,
+    }
+    best = min((r for r in records if r["refined"]),
+               key=lambda r: r["time_ns"], default=None)
+    if best is not None:
+        summary["best_time_point"] = {
+            "point_id": best["point_id"], "workload": best["workload"],
+            "overrides": best["overrides"], "time_ns": best["time_ns"]}
+        beste = min((r for r in records if r["refined"]),
+                    key=lambda r: r["energy_j"])
+        summary["best_energy_point"] = {
+            "point_id": beste["point_id"], "workload": beste["workload"],
+            "overrides": beste["overrides"], "energy_j": beste["energy_j"]}
+    return CampaignResult(spec=spec.to_dict(), records=records,
+                          summary=summary)

@@ -1,0 +1,212 @@
+"""Declarative sweep-campaign specs.
+
+A ``SweepSpec`` is the JSON-serializable description of a campaign:
+which workloads, which hardware preset, which parameter grid, and how to
+refine. Axes split into two kinds:
+
+* **analytic** axes (``ANALYTIC_AXES``) only move the parameter vector of
+  the vectorized scheduler — every combination inside a structural cell
+  is pre-screened in *one* XLA call without recompiling the task graph.
+* **structural** axes (everything else: ``n_tiles``, VMEM capacity, DMA
+  channel count, ...) change task-graph compilation or system topology,
+  so each distinct combination forms its own cell (one compile + one
+  batched pre-screen per cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from ..graph.workloads import WORKLOADS
+from ..hw.presets import HwConfig, resolve_preset
+from ..power.characterization import NOMINAL_TEMP_C
+
+__all__ = ["ANALYTIC_AXES", "RefineSpec", "SweepSpec", "GridPoint",
+           "SweepCell", "load_spec", "load_builtin_spec",
+           "builtin_spec_names", "BUILTIN_SPEC_DIR"]
+
+# HwConfig fields fully captured by core.vectorized.params_of — safe to
+# sweep inside one compiled task graph (see module docstring).
+ANALYTIC_AXES = frozenset({
+    "clock_ghz", "hbm_gbps", "dma_desc_overhead_ns",
+    "ici_link_gbps", "ici_latency_ns", "dcn_gbps", "dcn_latency_ns",
+    "n_mxu", "mxu_rows", "mxu_cols",
+    "vpu_lanes", "vpu_sublanes", "vpu_flops_per_lane",
+    "vmem_ports", "vmem_port_bytes_per_cycle",
+})
+
+_HW_FIELDS = {f.name for f in dataclasses.fields(HwConfig)}
+
+BUILTIN_SPEC_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "configs", "sweeps")
+
+
+@dataclass
+class RefineSpec:
+    """How the event engine refines the pre-screened grid."""
+
+    mode: str = "pareto"          # pareto | all | none
+    max_points: int = 16          # refinement budget per structural cell
+    pti_ns: float = 10_000.0      # Power-EM trace interval
+    temp_c: float = NOMINAL_TEMP_C
+    keep_series: bool = False     # keep per-module PTI power series
+
+    def __post_init__(self):
+        if self.mode not in ("pareto", "all", "none"):
+            raise ValueError(f"refine.mode must be pareto|all|none, "
+                             f"got {self.mode!r}")
+
+
+@dataclass
+class SweepSpec:
+    """One campaign: workloads x preset x grid (+ refinement policy)."""
+
+    name: str
+    workloads: List[str]
+    preset: str = "paper_skew"
+    base: Dict[str, Any] = field(default_factory=dict)
+    axes: Dict[str, List[Any]] = field(default_factory=dict)
+    n_tiles: List[int] = field(default_factory=lambda: [2])
+    compile_opts: Dict[str, Any] = field(default_factory=dict)
+    refine: RefineSpec = field(default_factory=RefineSpec)
+    cache_dir: Optional[str] = None
+    description: str = ""
+
+    def __post_init__(self):
+        if isinstance(self.refine, dict):
+            self.refine = RefineSpec(**self.refine)
+        if isinstance(self.n_tiles, int):
+            self.n_tiles = [self.n_tiles]
+        unknown = [w for w in self.workloads if w not in WORKLOADS]
+        if unknown:
+            raise KeyError(f"unknown workloads {unknown}; "
+                           f"have {sorted(WORKLOADS)}")
+        bad = [a for a in list(self.axes) + list(self.base)
+               if a not in _HW_FIELDS]
+        if bad:
+            raise KeyError(f"unknown HwConfig fields {bad}")
+        for a, vals in self.axes.items():
+            if not isinstance(vals, (list, tuple)) or not vals:
+                raise ValueError(f"axis {a!r} needs a non-empty value list")
+        # probe the preset early so a bad name fails at load, not mid-run
+        resolve_preset(self.preset)
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SweepSpec":
+        return cls(**d)
+
+    # -- grid -------------------------------------------------------------
+    @property
+    def analytic_axes(self) -> Dict[str, List[Any]]:
+        return {a: v for a, v in self.axes.items() if a in ANALYTIC_AXES}
+
+    @property
+    def structural_axes(self) -> Dict[str, List[Any]]:
+        return {a: v for a, v in self.axes.items() if a not in ANALYTIC_AXES}
+
+    @property
+    def grid_size(self) -> int:
+        n = len(self.workloads) * len(self.n_tiles)
+        for vals in self.axes.values():
+            n *= len(vals)
+        return n
+
+    def cells(self) -> List["SweepCell"]:
+        """Structural cells, each carrying its analytic sub-grid."""
+        s_axes = self.structural_axes
+        a_axes = self.analytic_axes
+        a_combos = [dict(zip(a_axes, vs))
+                    for vs in itertools.product(*a_axes.values())] or [{}]
+        out: List[SweepCell] = []
+        for w in self.workloads:
+            for nt in self.n_tiles:
+                for svals in itertools.product(*s_axes.values()):
+                    structural = dict(zip(s_axes, svals))
+                    pts = [GridPoint(workload=w, n_tiles=nt,
+                                     overrides={**structural, **a},
+                                     structural=dict(structural))
+                           for a in a_combos]
+                    out.append(SweepCell(spec=self, workload=w, n_tiles=nt,
+                                         structural=structural, points=pts))
+        return out
+
+    def hw_config(self, overrides: Dict[str, Any]) -> HwConfig:
+        return resolve_preset(self.preset, **{**self.base, **overrides})
+
+
+@dataclass
+class GridPoint:
+    """One point of the campaign grid."""
+
+    workload: str
+    n_tiles: int
+    overrides: Dict[str, Any]     # swept axis values (structural+analytic)
+    structural: Dict[str, Any]
+
+    def point_id(self) -> str:
+        blob = json.dumps({"w": self.workload, "nt": self.n_tiles,
+                           "ov": self.overrides}, sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+    def cfg(self, spec: SweepSpec) -> HwConfig:
+        return spec.hw_config(self.overrides)
+
+
+@dataclass
+class SweepCell:
+    """One structural cell: a shared task graph + its analytic sub-grid."""
+
+    spec: SweepSpec
+    workload: str
+    n_tiles: int
+    structural: Dict[str, Any]
+    points: List[GridPoint]
+
+    @property
+    def label(self) -> str:
+        s = ",".join(f"{k}={v}" for k, v in self.structural.items())
+        return f"{self.workload}/t{self.n_tiles}" + (f"/{s}" if s else "")
+
+    def base_cfg(self) -> HwConfig:
+        """Cell compile config: base + structural overrides (analytic axes
+        stay at their base values; they do not change the task graph)."""
+        return self.spec.hw_config(self.structural)
+
+
+# -- loading ---------------------------------------------------------------
+
+def load_spec(path_or_name: str) -> SweepSpec:
+    """Load a spec from a JSON file path, or by builtin name."""
+    if os.path.exists(path_or_name):
+        with open(path_or_name) as f:
+            return SweepSpec.from_dict(json.load(f))
+    return load_builtin_spec(path_or_name)
+
+
+def load_builtin_spec(name: str) -> SweepSpec:
+    p = os.path.join(BUILTIN_SPEC_DIR, f"{name}.json")
+    if not os.path.exists(p):
+        raise FileNotFoundError(
+            f"no spec file and no builtin spec named {name!r}; "
+            f"builtins: {builtin_spec_names()}")
+    with open(p) as f:
+        return SweepSpec.from_dict(json.load(f))
+
+
+def builtin_spec_names() -> List[str]:
+    if not os.path.isdir(BUILTIN_SPEC_DIR):
+        return []
+    return sorted(os.path.splitext(f)[0]
+                  for f in os.listdir(BUILTIN_SPEC_DIR)
+                  if f.endswith(".json"))

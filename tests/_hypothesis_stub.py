@@ -1,0 +1,197 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The test suite's property tests use a small subset of the hypothesis API
+(``given``/``settings`` and the ``lists``/``floats``/``integers``/``tuples``
+strategies). Environments built from ``pyproject.toml``'s ``[test]`` extra
+get the real library; hermetic containers without it fall back to this
+seeded-random implementation so the suite still collects and the
+properties are still exercised on boundary + pseudo-random examples.
+
+Installed into ``sys.modules`` by ``conftest.py`` *only* when the real
+package is absent — it never shadows a real install.
+"""
+from __future__ import annotations
+
+import random
+import struct
+import sys
+import types
+import zlib
+from typing import Any, List
+
+_MAX_FALLBACK_EXAMPLES = 25
+
+
+class _Strategy:
+    """A strategy draws one example from a seeded ``random.Random``."""
+
+    def __init__(self, draw_fn, boundary=()):
+        self._draw = draw_fn
+        self.boundary = tuple(boundary)  # deterministic edge-case examples
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def _f32(x: float) -> float:
+    return struct.unpack("f", struct.pack("f", x))[0]
+
+
+def floats(min_value=None, max_value=None, *, allow_nan=True,
+           allow_infinity=None, width=64, **_kw) -> _Strategy:
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+    cast = _f32 if width == 32 else float
+
+    def draw(rng: random.Random) -> float:
+        r = rng.random()
+        # bias towards the edges the way hypothesis shrinking would explore
+        if r < 0.1:
+            v = lo
+        elif r < 0.2:
+            v = hi
+        else:
+            v = lo + rng.random() * (hi - lo)
+        return cast(v)
+
+    mid = lo + 0.5 * (hi - lo)
+    return _Strategy(draw, boundary=(cast(lo), cast(hi), cast(mid)))
+
+
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi), boundary=(lo, hi))
+
+
+def lists(elements: _Strategy, *, min_size=0, max_size=None,
+          unique=False, **_kw) -> _Strategy:
+    cap = (min_size + 10) if max_size is None else max_size
+
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, cap)
+        out = [elements.example(rng) for _ in range(n)]
+        if unique:
+            seen, uniq = set(), []
+            for v in out:
+                if v not in seen:
+                    seen.add(v)
+                    uniq.append(v)
+            out = uniq + [elements.example(rng)
+                          for _ in range(min_size - len(uniq))]
+        return out
+
+    bnd = []
+    if min_size == 0:
+        bnd.append([])
+    if elements.boundary:
+        bnd.append([elements.boundary[0]] * max(min_size, 1))
+    return _Strategy(draw, boundary=bnd)
+
+
+def tuples(*elems: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+def sampled_from(choices) -> _Strategy:
+    seq = list(choices)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))],
+                     boundary=seq[:1])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5, boundary=(False, True))
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value, boundary=(value,))
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    """Decorator recording the example budget on the test function."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy, **kw_strategies: _Strategy):
+    if kw_strategies:
+        raise NotImplementedError(
+            "hypothesis fallback stub supports positional strategies only")
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            budget = min(getattr(fn, "_stub_max_examples", 100),
+                         _MAX_FALLBACK_EXAMPLES)
+            # stable per-test seed: same examples on every run/machine
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            cases = []
+            if all(s.boundary for s in strategies):
+                cases.extend(zip(*(s.boundary for s in strategies)))
+            while len(cases) < budget:
+                cases.append(tuple(s.example(rng) for s in strategies))
+            for case in cases[:budget]:
+                try:
+                    fn(*args, *case, **kwargs)
+                except _Unsatisfied:
+                    continue  # assume() discarded this example
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"falsifying example (hypothesis fallback): "
+                        f"{fn.__name__}{case!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # NOTE: deliberately no __wrapped__ — pytest would follow it and
+        # treat the property arguments as fixtures.
+        wrapper._stub_inner = fn
+        return wrapper
+
+    return deco
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+def example(*_a, **_k):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` + ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.example = example
+    mod.HealthCheck = HealthCheck
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "lists", "tuples", "sampled_from",
+                 "booleans", "just"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    mod.__is_repro_stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

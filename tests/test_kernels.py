@@ -81,6 +81,7 @@ def test_rmsnorm_sweep(shape, dtype):
                                atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
 
 
+@pytest.mark.slow
 @given(st.integers(2, 300), st.integers(1, 700))
 @settings(max_examples=12, deadline=None)
 def test_ssm_scan_property(S, C):

@@ -10,6 +10,9 @@ from repro.configs import REGISTRY
 from repro.models import build_model
 from repro.train.loop import init_state, make_train_step
 
+# whole-module: every case compiles + runs a real model step (2-30s each)
+pytestmark = pytest.mark.slow
+
 ARCHS = list(REGISTRY)
 
 

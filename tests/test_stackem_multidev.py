@@ -84,6 +84,7 @@ MULTIDEV_SNIPPET = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_multidevice_gspmd_subprocess():
     """End-to-end GSPMD guard: a REAL partitioned train step on 8 host
     devices (subprocess because the device count locks at jax init)."""

@@ -1,0 +1,223 @@
+"""Sweep-campaign subsystem: spec/grid, Pareto selection, cache,
+runner end-to-end (analytic pre-screen vs event refinement), CLI."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.sweep import (ANALYTIC_AXES, RefineSpec, ResultCache, SweepSpec,
+                         builtin_spec_names, load_builtin_spec, pareto_front,
+                         run_campaign, select_points)
+from repro.sweep.cache import content_key
+from repro.sweep.runner import load_result, save_result
+
+
+def _small_spec(**kw):
+    base = dict(
+        name="test_campaign",
+        workloads=["mobilenet_v2"],
+        preset="paper_skew",
+        axes={"clock_ghz": [0.4, 0.7, 1.0], "hbm_gbps": [17.0, 34.0]},
+        n_tiles=[2],
+        refine=RefineSpec(mode="pareto", max_points=2),
+    )
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+# -- spec / grid -----------------------------------------------------------
+
+def test_spec_grid_and_cells():
+    spec = _small_spec(n_tiles=[1, 2])
+    assert spec.grid_size == 3 * 2 * 2
+    cells = spec.cells()
+    assert len(cells) == 2           # n_tiles is structural
+    assert all(len(c.points) == 6 for c in cells)
+    assert spec.analytic_axes.keys() == {"clock_ghz", "hbm_gbps"}
+    assert not spec.structural_axes
+
+
+def test_spec_structural_axis_splits_cells():
+    spec = _small_spec(axes={"clock_ghz": [0.5, 1.0],
+                             "vmem_bytes": [2 * 2**20, 16 * 2**20]})
+    assert "vmem_bytes" not in ANALYTIC_AXES
+    cells = spec.cells()
+    assert len(cells) == 2           # one per vmem capacity
+    assert all(len(c.points) == 2 for c in cells)
+    # structural override lands in the cell's compile config
+    assert {c.base_cfg().vmem_bytes for c in cells} == \
+        {2 * 2**20, 16 * 2**20}
+
+
+def test_spec_validation_errors():
+    with pytest.raises(KeyError):
+        _small_spec(workloads=["nope"])
+    with pytest.raises(KeyError):
+        _small_spec(axes={"not_a_field": [1]})
+    with pytest.raises(ValueError):
+        _small_spec(axes={"clock_ghz": []})
+    with pytest.raises(ValueError):
+        _small_spec(refine=RefineSpec(mode="bogus"))
+    with pytest.raises(KeyError):
+        _small_spec(preset="no-such-preset")
+
+
+def test_spec_json_roundtrip():
+    spec = _small_spec()
+    spec2 = SweepSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert spec2.to_dict() == spec.to_dict()
+    assert [p.point_id() for c in spec2.cells() for p in c.points] == \
+        [p.point_id() for c in spec.cells() for p in c.points]
+
+
+def test_builtin_specs_load():
+    names = builtin_spec_names()
+    assert "dvfs_bw" in names
+    spec = load_builtin_spec("dvfs_bw")
+    assert spec.grid_size >= 100     # acceptance: >=100-point pre-screen
+    assert len(spec.cells()) == 1    # ... in ONE batched XLA call
+
+
+# -- pareto ----------------------------------------------------------------
+
+def test_pareto_front_simple():
+    obj = np.array([[1.0, 4.0], [2.0, 2.0], [4.0, 1.0],
+                    [3.0, 3.0], [2.0, 2.0]])
+    front = set(pareto_front(obj))
+    assert {0, 2} <= front
+    assert 3 not in front            # dominated by (2,2)
+
+
+def test_select_points_modes_and_budget():
+    rng = np.random.default_rng(0)
+    obj = rng.random((50, 2))
+    assert select_points(obj, "all") == list(range(50))
+    assert select_points(obj, "none") == []
+    picked = select_points(obj, "pareto", max_points=4)
+    assert 0 < len(picked) <= 4
+    front = sorted(pareto_front(obj), key=lambda i: obj[i, 0])
+    if len(front) > 4:               # endpoints pinned under thinning
+        assert front[0] in picked and front[-1] in picked
+    with pytest.raises(ValueError):
+        select_points(obj, "bogus")
+
+
+# -- cache -----------------------------------------------------------------
+
+def test_cache_roundtrip_and_miss(tmp_path):
+    c = ResultCache(str(tmp_path / "cache"))
+    key = content_key({"a": 1, "b": [2.0, 3]})
+    assert content_key({"b": [2.0, 3], "a": 1}) == key  # canonical
+    assert c.get(key) is None
+    c.put(key, {"x": 1.5})
+    assert c.get(key) == {"x": 1.5}
+    assert len(c) == 1
+    assert c.hits == 1 and c.misses == 1
+
+
+# -- runner end-to-end -----------------------------------------------------
+
+def test_campaign_prescreen_matches_event_engine(tmp_path):
+    """Acceptance: analytic pre-screen and event refinement agree within
+    the deviation bound already asserted for core/vectorized, and the
+    cache returns identical records on a second run."""
+    spec = _small_spec(cache_dir=str(tmp_path / "cache"))
+    res = run_campaign(spec, workers=0)
+    assert res.summary["grid_points"] == 6
+    assert res.summary["prescreen_calls"] == 1   # one XLA call
+    refined = res.refined
+    assert 0 < len(refined) <= 2
+    for r in refined:
+        assert 0.5 < r["deviation"] < 2.0        # same bound as tier-1
+        assert r["time_ns"] > 0 and r["energy_j"] > 0
+        assert not r["cached"]
+    # analytic proxy is present on every grid point
+    assert all(r["analytic_time_ns"] > 0 and r["analytic_avg_w"] > 0
+               for r in res.records)
+
+    # second run: all refinements served from the cache, identical records
+    res2 = run_campaign(spec, workers=0)
+    assert res2.summary["cache_hits"] == len(refined)
+    assert res2.summary["simulated"] == 0
+
+    def strip(recs):
+        return [{k: v for k, v in r.items() if k != "cached"}
+                for r in recs]
+
+    assert strip(res2.records) == strip(res.records)
+    assert all(r["cached"] for r in res2.refined)
+
+
+def test_campaign_monotone_in_clock(tmp_path):
+    """Analytic pre-screen must preserve the DVFS trend the event engine
+    shows: higher clock -> lower makespan."""
+    spec = _small_spec(axes={"clock_ghz": [0.3, 0.6, 0.9, 1.2]},
+                       refine=RefineSpec(mode="none"))
+    res = run_campaign(spec, workers=0, use_cache=False)
+    recs = sorted(res.records,
+                  key=lambda r: r["overrides"]["clock_ghz"])
+    times = [r["analytic_time_ns"] for r in recs]
+    assert all(a > b for a, b in zip(times, times[1:]))
+
+
+def test_campaign_refine_all_and_result_io(tmp_path):
+    spec = _small_spec(axes={"clock_ghz": [0.5, 1.0]},
+                       refine=RefineSpec(mode="all"))
+    res = run_campaign(spec, workers=0, use_cache=False)
+    assert len(res.refined) == 2
+    assert res.best("time_ns")["overrides"]["clock_ghz"] == 1.0
+    p = str(tmp_path / "campaign.json")
+    save_result(res, p)
+    res2 = load_result(p)
+    assert res2.records == res.records
+    assert res2.summary == res.summary
+
+
+def test_campaign_keep_series(tmp_path):
+    spec = _small_spec(axes={},
+                       refine=RefineSpec(mode="all", keep_series=True,
+                                         pti_ns=50_000.0))
+    res = run_campaign(spec, workers=0, use_cache=False)
+    (rec,) = res.refined
+    assert rec["series_w"] and rec["pti_ns"] == 50_000.0
+    total0 = sum(v[0] for v in rec["series_w"].values())
+    assert total0 > 0
+
+
+@pytest.mark.slow
+def test_campaign_parallel_workers_match_inline(tmp_path):
+    spec = _small_spec(refine=RefineSpec(mode="all"))
+    inline = run_campaign(spec, workers=0, use_cache=False)
+    par = run_campaign(spec, workers=2, use_cache=False)
+    assert par.records == inline.records
+
+
+@pytest.mark.slow
+def test_cli_run_end_to_end(tmp_path):
+    """`python -m repro.sweep run <spec>` executes a campaign and the
+    artifact is a well-formed campaign record file."""
+    spec_path = tmp_path / "spec.json"
+    spec = _small_spec(name="cli_campaign")
+    spec_path.write_text(json.dumps(spec.to_dict()))
+    out = tmp_path / "out.json"
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.sweep", "run", str(spec_path),
+         "--workers", "0", "--cache-dir", str(tmp_path / "cache"),
+         "--out", str(out)],
+        capture_output=True, text=True, timeout=300, env=env,
+        cwd=str(tmp_path))
+    assert r.returncode == 0, r.stderr
+    assert "prescreen" in r.stdout and "grid_points,6" in r.stdout
+    rec = json.loads(out.read_text())
+    assert rec["summary"]["grid_points"] == 6
+    assert any(x["refined"] for x in rec["records"])
+    # listing builtins works too
+    r2 = subprocess.run([sys.executable, "-m", "repro.sweep", "list"],
+                        capture_output=True, text=True, timeout=60, env=env)
+    assert r2.returncode == 0 and "dvfs_bw" in r2.stdout

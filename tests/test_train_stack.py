@@ -112,6 +112,7 @@ def test_checkpoint_roundtrip_and_gc(tmp_path):
     assert steps == [40, 50]
 
 
+@pytest.mark.slow
 def test_restart_resumes_bit_identical():
     """Fault-tolerance runbook: kill after step k, restore, continue ->
     identical final loss as the uninterrupted run."""
