@@ -1,0 +1,84 @@
+"""Execution-service CLI.
+
+  python -m repro.exec worker <spool> [--follow] [--max-jobs N]
+  python -m repro.exec status <spool>
+  python -m repro.exec journal <file> [--expect-done] [--min-points N]
+
+``worker`` drains (or, with ``--follow``, keeps watching) a filesystem
+job spool — run any number of these, from any process or host sharing
+the spool directory. ``status`` prints queue counts. ``journal`` folds a
+campaign journal into per-status counts; ``--expect-done`` exits
+non-zero unless every point resolved (the CI smoke assertion).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .journal import CampaignJournal
+from .spool import Spool
+from .worker import run_worker
+
+
+def cmd_worker(args: argparse.Namespace) -> int:
+    n = run_worker(args.spool, drain=not args.follow, poll_s=args.poll_s,
+                   hb_s=args.hb_s, max_jobs=args.max_jobs,
+                   log=lambda m: print(m, flush=True))
+    print(f"worker exit: {n} jobs completed")
+    return 0
+
+
+def cmd_status(args: argparse.Namespace) -> int:
+    counts = Spool(args.spool).counts()
+    for state, n in counts.items():
+        print(f"{state},{n}")
+    return 0
+
+
+def cmd_journal(args: argparse.Namespace) -> int:
+    view = CampaignJournal.load(args.path)
+    counts = view.counts()
+    for k in ("total", "done", "cached", "failed", "other"):
+        print(f"{k},{counts[k]}")
+    if view.summary:
+        print(f"summary,{json.dumps(view.summary, sort_keys=True)}")
+    if args.expect_done:
+        ok = view.all_done(min_points=args.min_points)
+        print(f"all_done,{ok}")
+        return 0 if ok else 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.exec",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    wp = sub.add_parser("worker", help="drain/follow a job spool")
+    wp.add_argument("spool", help="spool directory")
+    wp.add_argument("--follow", action="store_true",
+                    help="keep polling instead of exiting when drained")
+    wp.add_argument("--poll-s", type=float, default=0.5)
+    wp.add_argument("--hb-s", type=float, default=5.0,
+                    help="heartbeat interval (lease keep-alive)")
+    wp.add_argument("--max-jobs", type=int, default=None)
+    wp.set_defaults(fn=cmd_worker)
+
+    stp = sub.add_parser("status", help="print spool queue counts")
+    stp.add_argument("spool")
+    stp.set_defaults(fn=cmd_status)
+
+    jp = sub.add_parser("journal", help="summarize a campaign journal")
+    jp.add_argument("path")
+    jp.add_argument("--expect-done", action="store_true",
+                    help="exit 1 unless all points are done/cached")
+    jp.add_argument("--min-points", type=int, default=1)
+    jp.set_defaults(fn=cmd_journal)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""The ``Backend`` contract and the inline reference implementation.
+
+A backend executes an ordered batch of refinement payloads (the
+cache-keyed dicts built by ``repro.sweep.refine.refine_payload``) and
+returns the refined records **in the same order**. The campaign runner
+owns everything else — pre-screen, selection, the result cache, journal
+cache-hit events — so backends stay small and interchangeable:
+``run_campaign(..., backend="inline"|"pool"|"spool")`` is the only
+switch.
+
+Implementations must be deterministic in *content*: for a given payload
+list every backend produces the same records (the equivalence tests and
+the byte-identical acceptance check rely on it).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Protocol, \
+    runtime_checkable
+
+__all__ = ["Backend", "BackendError", "InlineBackend", "get_backend",
+           "BACKEND_NAMES"]
+
+BACKEND_NAMES = ("inline", "pool", "spool")
+
+Payload = Dict[str, Any]
+Record = Dict[str, Any]
+Progress = Optional[Callable[[str], None]]
+
+
+class BackendError(RuntimeError):
+    """A backend could not produce a record for one or more payloads."""
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Refinement execution strategy."""
+
+    name: str
+
+    def refine(self, payloads: List[Payload], *,
+               keys: Optional[List[str]] = None,
+               journal: Optional[Any] = None,
+               cache: Optional[Any] = None,
+               progress: Progress = None) -> List[Record]:
+        """Refine every payload; return records in payload order.
+
+        ``keys`` are the content-hash job ids (one per payload — the
+        same keys the result cache uses), ``journal`` an optional
+        ``CampaignJournal`` receiving per-point ``done`` events, and
+        ``cache`` an optional ``ResultCache`` each record is written
+        through to **as soon as it lands** — so a runner killed
+        mid-batch loses nothing already refined, and the re-invocation
+        sees those points as cache hits.
+        """
+        ...
+
+
+def _cache_put(cache, key: Optional[str], rec: Record) -> None:
+    if cache is not None and key is not None:
+        cache.put(key, canonical(rec))
+
+
+def canonical(rec: Record) -> Record:
+    """JSON round-trip (sorted keys) — the one shape records ever take
+    on disk or in results, so backends, cache, and resumed runs are
+    byte-identical."""
+    import json
+
+    return json.loads(json.dumps(rec, sort_keys=True, default=float))
+
+
+def _journal_done(journal, key: Optional[str], *, worker: str,
+                  wall_s: Optional[float]) -> None:
+    if journal is not None and key is not None:
+        journal.point(key, "done", worker=worker, wall_s=wall_s)
+
+
+class InlineBackend:
+    """Sequential in-process refinement — deterministic, zero setup."""
+
+    name = "inline"
+
+    def refine(self, payloads: List[Payload], *,
+               keys: Optional[List[str]] = None,
+               journal: Optional[Any] = None,
+               cache: Optional[Any] = None,
+               progress: Progress = None) -> List[Record]:
+        from ..sweep.refine import refine_point
+
+        keys = keys or [None] * len(payloads)
+        out: List[Record] = []
+        for payload, key in zip(payloads, keys):
+            t0 = time.time()
+            rec = refine_point(payload)
+            _cache_put(cache, key, rec)
+            _journal_done(journal, key, worker="inline",
+                          wall_s=time.time() - t0)
+            out.append(rec)
+        return out
+
+
+def get_backend(name: str, *, workers: Optional[int] = None,
+                spool_dir: Optional[str] = None, **opts: Any) -> Backend:
+    """Build a backend from its CLI name.
+
+    * ``inline``            — sequential in-process.
+    * ``pool``              — ``workers`` local processes (None = per core).
+    * ``spool``             — filesystem job spool at ``spool_dir`` with
+      ``workers`` locally-spawned daemons (0 = rely on external workers
+      attached via ``python -m repro.exec worker <spool_dir>``).
+    """
+    if name == "inline":
+        return InlineBackend()
+    if name == "pool":
+        from .pool import PoolBackend
+        return PoolBackend(workers=workers, **opts)
+    if name == "spool":
+        from .spool import SpoolBackend
+        if not spool_dir:
+            raise ValueError("spool backend needs spool_dir")
+        n = workers if workers is not None else 1
+        return SpoolBackend(spool_dir, workers=n, **opts)
+    raise ValueError(f"unknown backend {name!r}; "
+                     f"have {'|'.join(BACKEND_NAMES)}")

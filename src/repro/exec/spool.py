@@ -1,0 +1,376 @@
+"""Filesystem job spool: durable, multi-process refinement queue.
+
+Layout (everything is plain JSON under one root directory)::
+
+    <root>/jobs/<key>.json            pending   {"key", "payload"}
+    <root>/active/<key>@<worker>.json claimed   (heartbeat = file mtime)
+    <root>/done/<key>.json            finished  {"key","record","worker",..}
+    <root>/failed/<key>.json          errored   {"key","error","worker",..}
+
+Concurrency is pure POSIX filesystem semantics — no locks, no network:
+
+* **claim** — ``rename(jobs/k.json, active/k@w.json)``. Rename is
+  atomic; exactly one of any number of racing workers wins, the losers
+  get ``FileNotFoundError`` and move on.
+* **heartbeat lease** — a claiming worker touches its active file
+  periodically. An active file whose mtime is older than ``lease_s`` is
+  presumed orphaned (killed worker) and **reclaimed**: renamed back
+  into ``jobs/`` where any worker can claim it again.
+* **complete** — results are staged as invisible ``.tmp`` files and
+  published with ``os.replace`` so readers never observe a torn
+  ``done`` file.
+
+Job ids are the refinement content keys (``sweep.cache.content_key``),
+so the spool is naturally idempotent: re-submitting a campaign after a
+kill re-creates only the jobs that never finished, and a ``done`` file
+surviving a dead runner is picked up without re-simulation.
+
+``SpoolBackend`` drives a campaign's misses through a spool: submit,
+optionally spawn local worker daemons, poll for completion while
+reclaiming dead jobs, and collect records in payload order.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from ..sweep.cache import atomic_write_json
+from .backend import BackendError, Progress, _cache_put
+
+__all__ = ["Spool", "SpoolJob", "SpoolBackend", "DEFAULT_LEASE_S",
+           "worker_id"]
+
+DEFAULT_LEASE_S = 60.0
+_STATES = ("jobs", "active", "done", "failed")
+
+
+def worker_id() -> str:
+    return f"{os.uname().nodename}-{os.getpid()}"
+
+
+def _publish(directory: str, key: str, obj: Dict[str, Any]) -> str:
+    """Atomic in-place publish; the .tmp staging files are invisible to
+    every listing (they all filter on the .json suffix)."""
+    return atomic_write_json(os.path.join(directory, key + ".json"), obj,
+                             sort_keys=True)
+
+
+@dataclass
+class SpoolJob:
+    """A claimed job: payload plus the active-file lease to heartbeat."""
+
+    key: str
+    payload: Dict[str, Any]
+    active_path: str
+    worker: str
+    t_claim: float
+
+    def heartbeat(self) -> bool:
+        """Refresh the lease; False if the job was reclaimed under us."""
+        try:
+            os.utime(self.active_path)
+            return True
+        except FileNotFoundError:
+            return False
+
+
+class Spool:
+    """One job spool rooted at a directory; see module docstring."""
+
+    def __init__(self, root: str, *, lease_s: float = DEFAULT_LEASE_S):
+        self.root = os.path.abspath(root)
+        self.lease_s = lease_s
+        for d in _STATES:
+            os.makedirs(os.path.join(self.root, d), exist_ok=True)
+
+    def _dir(self, state: str) -> str:
+        return os.path.join(self.root, state)
+
+    def _list(self, state: str) -> List[str]:
+        return sorted(f for f in os.listdir(self._dir(state))
+                      if f.endswith(".json"))
+
+    # -- producer side ----------------------------------------------------
+
+    def submit(self, key: str, payload: Dict[str, Any]) -> bool:
+        """Enqueue one job; no-op (False) if the key is already pending,
+        claimed, or done — submission is idempotent. A ``failed`` entry
+        from an earlier run is cleared and retried."""
+        for state in ("jobs", "active", "done"):
+            probe = self._dir(state)
+            if state == "active":
+                if any(f.startswith(key + "@") for f in os.listdir(probe)):
+                    return False
+            elif os.path.exists(os.path.join(probe, key + ".json")):
+                return False
+        try:
+            os.unlink(os.path.join(self._dir("failed"), key + ".json"))
+        except FileNotFoundError:
+            pass
+        _publish(self._dir("jobs"), key,
+                 {"key": key, "payload": payload})
+        return True
+
+    def result(self, key: str) -> Optional[Dict[str, Any]]:
+        """The done-file dict for ``key`` (or None). Tolerates a torn
+        file only insofar as done files are published atomically."""
+        p = os.path.join(self._dir("done"), key + ".json")
+        try:
+            with open(p) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def failure(self, key: str) -> Optional[Dict[str, Any]]:
+        p = os.path.join(self._dir("failed"), key + ".json")
+        try:
+            with open(p) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def counts(self) -> Dict[str, int]:
+        return {state: len(self._list(state)) for state in _STATES}
+
+    def done_keys(self) -> set:
+        """Keys with a published result — one listdir, no file reads."""
+        return {f[:-len(".json")] for f in self._list("done")}
+
+    def failed_keys(self) -> set:
+        return {f[:-len(".json")] for f in self._list("failed")}
+
+    # -- worker side ------------------------------------------------------
+
+    def claim(self, worker: Optional[str] = None) -> Optional[SpoolJob]:
+        """Claim one pending job by atomic rename; None when empty."""
+        worker = worker or worker_id()
+        for fname in self._list("jobs"):
+            key = fname[:-len(".json")]
+            if os.path.exists(os.path.join(self._dir("done"),
+                                           key + ".json")):
+                # finished elsewhere (e.g. requeued by an over-eager
+                # reclaim while its worker kept computing): drop it
+                try:
+                    os.unlink(os.path.join(self._dir("jobs"), fname))
+                except FileNotFoundError:
+                    pass
+                continue
+            src = os.path.join(self._dir("jobs"), fname)
+            dst = os.path.join(self._dir("active"), f"{key}@{worker}.json")
+            try:
+                # rename preserves mtime and the job file's may already
+                # be older than the lease (a resumed spool): restart the
+                # lease clock BEFORE the rename so the active file is
+                # never observable with a stale heartbeat
+                os.utime(src)
+                os.rename(src, dst)
+                with open(dst) as f:
+                    payload = json.load(f)["payload"]
+            except FileNotFoundError:
+                continue               # lost the race for this job
+            except (json.JSONDecodeError, KeyError):
+                # torn job file (non-atomic producer fs): surface it as
+                # a failure so a waiting backend fails fast instead of
+                # hanging; resubmission retries the key
+                _publish(self._dir("failed"), key,
+                         {"key": key, "error": "corrupt job file",
+                          "worker": worker, "t_failed": time.time()})
+                os.unlink(dst)
+                continue
+            return SpoolJob(key=key, payload=payload, active_path=dst,
+                            worker=worker, t_claim=time.time())
+        return None
+
+    def complete(self, job: SpoolJob, record: Dict[str, Any], *,
+                 wall_s: float) -> str:
+        dst = _publish(
+            self._dir("done"), job.key,
+            {"key": job.key, "record": record, "worker": job.worker,
+             "wall_s": wall_s, "t_done": time.time()})
+        self._release(job)
+        return dst
+
+    def fail(self, job: SpoolJob, error: str) -> str:
+        dst = _publish(
+            self._dir("failed"), job.key,
+            {"key": job.key, "error": error, "worker": job.worker,
+             "t_failed": time.time()})
+        self._release(job)
+        return dst
+
+    def _release(self, job: SpoolJob) -> None:
+        try:
+            os.unlink(job.active_path)
+        except FileNotFoundError:
+            pass                       # reclaimed while we worked: the
+            #                            done/failed file still wins
+
+    # -- janitor ----------------------------------------------------------
+
+    def reclaim(self, *, lease_s: Optional[float] = None,
+                now: Optional[float] = None) -> int:
+        """Return orphaned active jobs (stale heartbeat) to ``jobs/``."""
+        lease = lease_s if lease_s is not None else self.lease_s
+        now = now if now is not None else time.time()
+        n = 0
+        for fname in self._list("active"):
+            p = os.path.join(self._dir("active"), fname)
+            try:
+                age = now - os.stat(p).st_mtime
+            except FileNotFoundError:
+                continue
+            if age <= lease:
+                continue
+            key = fname.split("@", 1)[0]
+            if os.path.exists(os.path.join(self._dir("done"),
+                                           key + ".json")):
+                # finished but the worker died before releasing the claim
+                try:
+                    os.unlink(p)
+                except FileNotFoundError:
+                    pass
+                continue
+            try:
+                os.rename(p, os.path.join(self._dir("jobs"), key + ".json"))
+                n += 1
+            except FileNotFoundError:
+                continue
+        return n
+
+
+class SpoolBackend:
+    """Refine through a ``Spool``, optionally spawning local workers.
+
+    ``workers=N`` (N>=1) spawns N ``python -m repro.exec worker --drain``
+    subprocesses that exit when the queue empties; ``workers=0`` relies
+    entirely on externally attached workers (detached daemons, other
+    hosts on a shared filesystem). Either way the backend polls for
+    completion, reclaims dead jobs, and respawns a local drain worker if
+    its fleet dies with jobs still pending.
+    """
+
+    name = "spool"
+
+    def __init__(self, root: str, *, workers: int = 1,
+                 lease_s: float = DEFAULT_LEASE_S, poll_s: float = 0.2,
+                 timeout_s: Optional[float] = None):
+        self.root = root
+        self.workers = workers
+        self.lease_s = lease_s
+        self.poll_s = poll_s
+        self.timeout_s = timeout_s
+
+    def _spawn_worker(self) -> subprocess.Popen:
+        import repro
+        src = os.path.dirname(repro.__path__[0])
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.exec", "worker", self.root],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+
+    def refine(self, payloads: List[Dict[str, Any]], *,
+               keys: Optional[List[str]] = None,
+               journal: Optional[Any] = None,
+               cache: Optional[Any] = None,
+               progress: Progress = None) -> List[Dict[str, Any]]:
+        if keys is None:
+            from ..sweep.cache import content_key
+            keys = [content_key(p) for p in payloads]
+        spool = Spool(self.root, lease_s=self.lease_s)
+
+        submitted = 0
+        for key, payload in zip(keys, payloads):
+            if spool.result(key) is None:  # resume: keep surviving results
+                submitted += spool.submit(key, payload)
+        if progress:
+            progress(f"spool {self.root}: {submitted} submitted, "
+                     f"{len(keys) - submitted} already queued/finished")
+
+        procs = [self._spawn_worker() for _ in range(self.workers)]
+        respawns_left = max(self.workers, 1)
+        pending = set(keys)
+        collected: Dict[str, Dict[str, Any]] = {}
+        journaled: set = set()
+        t0 = time.time()
+        t_report = t0
+        try:
+            while pending:
+                # one listdir per state per tick; files are read only
+                # for newly resolved keys
+                for key in sorted(pending & spool.done_keys()):
+                    res = spool.result(key)
+                    if res is None:
+                        continue       # torn listing race; next tick
+                    pending.discard(key)
+                    collected[key] = res["record"]
+                    if cache is not None:
+                        # write-through: durable even if this runner
+                        # dies before the batch completes
+                        _cache_put(cache, key, res["record"])
+                    if journal is not None and key not in journaled:
+                        journal.point(key, "done",
+                                      worker=res.get("worker"),
+                                      wall_s=res.get("wall_s"))
+                        journaled.add(key)
+                for key in sorted(pending & spool.failed_keys()):
+                    fail = spool.failure(key)
+                    if fail is None:
+                        continue
+                    pending.discard(key)
+                    if journal is not None and key not in journaled:
+                        journal.point(key, "failed",
+                                      worker=fail.get("worker"),
+                                      error=fail.get("error"))
+                        journaled.add(key)
+                if not pending:
+                    break
+                spool.reclaim()
+                procs = [p for p in procs if p.poll() is None]
+                if (not procs and self.workers > 0 and respawns_left > 0
+                        and spool.counts()["jobs"] > 0):
+                    # local fleet died with work pending (e.g. a reclaim
+                    # landed after the drain workers exited)
+                    procs.append(self._spawn_worker())
+                    respawns_left -= 1
+                if progress and time.time() - t_report > 2.0:
+                    done = len(keys) - len(pending)
+                    progress(f"spool: {done}/{len(keys)} done "
+                             f"({len(procs)} local workers)")
+                    t_report = time.time()
+                if (self.timeout_s is not None
+                        and time.time() - t0 > self.timeout_s):
+                    raise BackendError(
+                        f"spool backend timed out after {self.timeout_s}s "
+                        f"with {len(pending)} points pending "
+                        f"(spool: {self.root})")
+                time.sleep(self.poll_s)
+        finally:
+            for p in procs:
+                if p.poll() is None:
+                    p.terminate()
+            for p in procs:
+                try:
+                    p.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+
+        out: List[Dict[str, Any]] = []
+        failures: List[str] = []
+        for key in keys:
+            rec = collected.get(key)
+            if rec is None:
+                fail = spool.failure(key) or {}
+                failures.append(f"{key[:12]}: {fail.get('error', '?')}")
+                continue
+            out.append(rec)
+        if failures:
+            raise BackendError(
+                f"{len(failures)} refinement(s) failed in spool "
+                f"{self.root}: " + "; ".join(failures[:3]))
+        return out

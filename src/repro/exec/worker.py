@@ -1,0 +1,90 @@
+"""Spool worker: claim -> heartbeat -> refine -> publish, in a loop.
+
+``run_worker`` is the whole daemon; ``python -m repro.exec worker
+<spool>`` wraps it. Two modes:
+
+* ``drain=True``  — exit once the queue is empty (the mode the
+  ``SpoolBackend`` uses for the workers it spawns itself);
+* ``drain=False`` — keep polling forever (a detached daemon that
+  outlives any single campaign; new jobs are picked up as they appear).
+
+While a refinement runs, a daemon thread refreshes the job's lease every
+``hb_s`` seconds so long simulations survive the spool's dead-job
+reclamation; a worker that is SIGKILLed simply stops heartbeating and
+its job is reclaimed by someone else after ``lease_s``.
+
+The import path is jax-free (``repro.sweep.refine``), so worker startup
+is milliseconds, not an XLA initialization.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, Optional
+
+from .spool import Spool, SpoolJob, worker_id
+
+__all__ = ["run_worker"]
+
+
+def _heartbeat_loop(job: SpoolJob, stop: threading.Event,
+                    hb_s: float) -> None:
+    while not stop.wait(hb_s):
+        if not job.heartbeat():
+            return                     # reclaimed under us; stop touching
+
+
+def run_worker(root: str, *, drain: bool = True, poll_s: float = 0.5,
+               hb_s: float = 5.0, max_jobs: Optional[int] = None,
+               worker: Optional[str] = None,
+               refine_fn: Optional[Callable[[Dict[str, Any]],
+                                            Dict[str, Any]]] = None,
+               log: Optional[Callable[[str], None]] = None) -> int:
+    """Drain (or follow) a spool; returns the number of jobs completed.
+
+    ``refine_fn`` is injectable for tests; the default is the real
+    event-engine refinement (``repro.sweep.refine.refine_point``).
+    """
+    if refine_fn is None:
+        from ..sweep.refine import refine_point
+        refine_fn = refine_point
+    spool = Spool(root)
+    wid = worker or worker_id()
+    n_done = 0
+    while True:
+        job = spool.claim(wid)
+        if job is None:
+            # maybe a dead worker holds the remaining jobs
+            reclaimed = spool.reclaim()
+            if reclaimed:
+                continue
+            if drain:
+                break
+            time.sleep(poll_s)
+            continue
+        if log:
+            log(f"[{wid}] claim {job.key[:12]}")
+        stop = threading.Event()
+        hb = threading.Thread(target=_heartbeat_loop, args=(job, stop, hb_s),
+                              daemon=True)
+        hb.start()
+        t0 = time.time()
+        try:
+            record = refine_fn(job.payload)
+        except Exception:
+            stop.set()
+            hb.join(timeout=hb_s + 1)
+            spool.fail(job, traceback.format_exc(limit=8))
+            if log:
+                log(f"[{wid}] FAIL {job.key[:12]}")
+            continue
+        stop.set()
+        hb.join(timeout=hb_s + 1)
+        spool.complete(job, record, wall_s=time.time() - t0)
+        n_done += 1
+        if log:
+            log(f"[{wid}] done {job.key[:12]} ({time.time() - t0:.2f}s)")
+        if max_jobs is not None and n_done >= max_jobs:
+            break
+    return n_done

@@ -62,7 +62,9 @@ def compile_ops(ops: Sequence[Op], cfg: HwConfig,
     hbm_bytes = 0.0
     total_flops = 0.0
     spilled = 0
-    prev_barrier: Optional[int] = None   # signaled nt times when layer done
+    # (barrier id, signal count) of the previous layer: nt for tiled
+    # compute layers, 1 for single-task collective layers
+    prev_barrier: Optional[Tuple[int, int]] = None
     budget = cfg.vmem_bytes * opts.resident_fraction
 
     def alloc(nbytes: float) -> int:
@@ -80,7 +82,21 @@ def compile_ops(ops: Sequence[Op], cfg: HwConfig,
 
         waits: List[Tuple[int, int]] = []
         if prev_barrier is not None:
-            waits.append((prev_barrier, nt))
+            waits.append(prev_barrier)
+
+        # tensor-parallel collectives run on the ICI fabric: one
+        # per-device task, no tiling, no weight traffic
+        if op.kind == "allreduce":
+            done_b = next(_bid)
+            tasks.append(Task(
+                engine="ici",
+                payload=CollectiveSpec(op="all-reduce",
+                                       payload_bytes=in_bytes,
+                                       group_size=op.group,
+                                       name=op.name),
+                waits=tuple(waits), signals=(done_b,), name=op.name))
+            prev_barrier = (done_b, 1)
+            continue
 
         # weight DMA (broadcast to all tiles, optionally compressed)
         if w_bytes > 0:
@@ -147,7 +163,7 @@ def compile_ops(ops: Sequence[Op], cfg: HwConfig,
             tasks.append(Task(engine=engine, payload=payload,
                               waits=tuple(waits), signals=(done_b,),
                               name=f"{op.name}@t{t}"))
-        prev_barrier = done_b
+        prev_barrier = (done_b, nt)
 
         if streams:
             tasks.append(Task(

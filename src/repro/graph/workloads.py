@@ -18,20 +18,23 @@ inserts DMA tasks + barriers, and applies variant effects.
 from __future__ import annotations
 
 import dataclasses
+import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from ..configs.base import ArchConfig
 
 __all__ = ["Op", "mobilenet_v2", "resnet50", "tiny_yolo_v2", "WORKLOADS",
-           "lm_layer_ops", "workload_flops", "workload_bytes"]
+           "lm_layer_ops", "lm_workload_name", "lm_grid_names",
+           "resolve_workload", "is_workload", "workload_flops",
+           "workload_bytes"]
 
 
 @dataclass(frozen=True)
 class Op:
     name: str
     kind: str              # conv | dwconv | matmul | pool | eltwise | act |
-    #                        softmax | global_pool
+    #                        softmax | global_pool | allreduce
     # GEMM view (conv is im2col'd): out[M,N] = in[M,K] @ w[K,N]
     m: int = 0
     n: int = 0
@@ -44,6 +47,7 @@ class Op:
     out_bytes: float = 0.0
     w_bytes: float = 0.0
     sparsity: float = 0.0  # fraction of MACs skippable by sparsity HW
+    group: int = 1         # collective group size (allreduce ops)
 
     @property
     def flops(self) -> float:
@@ -225,9 +229,74 @@ def lm_layer_ops(cfg: ArchConfig, *, seq: int, batch: int,
                in_bytes=T * f * dtype_bytes, out_bytes=T * d * dtype_bytes,
                w_bytes=f * d * dtype_bytes),
         ]
+    if tp_shards > 1:
+        # Megatron-style TP: one all-reduce after the attention output
+        # projection and one after the MLP/MoE down projection
+        ar_bytes = T * d * dtype_bytes
+        ops.insert(5, Op("attn_allreduce", "allreduce",
+                         in_bytes=ar_bytes, out_bytes=ar_bytes,
+                         group=tp_shards))
+        ops.append(Op("mlp_allreduce", "allreduce",
+                      in_bytes=ar_bytes, out_bytes=ar_bytes,
+                      group=tp_shards))
     ops.append(Op("norms", "eltwise", elems=2 * T * d, vec_kind="rsqrt",
                   in_bytes=T * d * dtype_bytes, out_bytes=T * d * dtype_bytes))
     return ops
+
+
+# -- parameterized LM workload names ---------------------------------------
+#
+# ``lm/<arch>/s<seq>b<batch>tp<tp>`` names one ``lm_layer_ops`` instance
+# (per-device op list of one transformer layer of ``<arch>`` at sequence
+# length / batch / tensor-parallel degree). ``resolve_workload`` accepts
+# these anywhere a plain ``WORKLOADS`` name is accepted, which is what
+# lets sweep campaigns grid LM workloads over seq x batch x TP.
+
+_LM_NAME_RE = re.compile(
+    r"^lm/(?P<arch>[A-Za-z0-9_.\-]+)/s(?P<seq>\d+)b(?P<batch>\d+)"
+    r"tp(?P<tp>\d+)$")
+
+
+def lm_workload_name(arch: str, *, seq: int, batch: int, tp: int) -> str:
+    return f"lm/{arch}/s{seq}b{batch}tp{tp}"
+
+
+def lm_grid_names(arch: str, seq: List[int], batch: List[int],
+                  tp: List[int]) -> List[str]:
+    """Expand a seq x batch x TP grid into workload names (grid order:
+    seq-major, then batch, then tp)."""
+    return [lm_workload_name(arch, seq=s, batch=b, tp=t)
+            for s in seq for b in batch for t in tp]
+
+
+def resolve_workload(name: str) -> Callable[[], List[Op]]:
+    """Map a workload name — builtin CNN or parameterized ``lm/...`` —
+    to its op-list factory; raises KeyError for unknown names."""
+    if name in WORKLOADS:
+        return WORKLOADS[name]
+    m = _LM_NAME_RE.match(name)
+    if not m:
+        raise KeyError(
+            f"unknown workload {name!r}; have {sorted(WORKLOADS)} or "
+            f"'lm/<arch>/s<seq>b<batch>tp<tp>'")
+    from ..configs import get_config   # deferred: avoids import cycle
+    cfg = get_config(m["arch"])        # raises KeyError on bad arch
+    seq, batch, tp = int(m["seq"]), int(m["batch"]), int(m["tp"])
+    if seq < 1 or batch < 1 or tp < 1:
+        raise KeyError(f"bad LM workload parameters in {name!r}")
+
+    def build() -> List[Op]:
+        return lm_layer_ops(cfg, seq=seq, batch=batch, tp_shards=tp)
+
+    return build
+
+
+def is_workload(name: str) -> bool:
+    try:
+        resolve_workload(name)
+        return True
+    except KeyError:
+        return False
 
 
 def workload_flops(ops: List[Op]) -> float:

@@ -14,11 +14,17 @@ sweep script into a declarative **campaign**:
 3. **Select** (``pareto.py``) — the Pareto-interesting points (time x
    energy front, plus extremes) are chosen for refinement.
 4. **Refine** (``refine.py``/``runner.py``) — only the selected points
-   re-run on the ground-truth event engine + Power-EM, in parallel worker
-   processes, behind a content-hashed on-disk result cache
-   (``cache.py``) so repeated campaigns are incremental.
+   re-run on the ground-truth event engine + Power-EM, executed through
+   a pluggable ``repro.exec`` backend (inline / local process pool /
+   resumable filesystem job spool) behind a content-hashed on-disk
+   result cache (``cache.py``) so repeated — and interrupted —
+   campaigns are incremental. A per-point JSONL journal records status,
+   wall time, worker id, and cache-hit counters.
 
-CLI: ``python -m repro.sweep run <spec.json | builtin-name>``.
+CLI: ``python -m repro.sweep run <spec.json | builtin-name>
+[--backend inline|pool|spool]``; workers attach with
+``python -m repro.exec worker <spool>``; cache maintenance with
+``python -m repro.sweep cache``.
 
 Attribute access is lazy (PEP 562): refinement worker processes import
 ``repro.sweep.refine`` without paying for jax/XLA initialization.

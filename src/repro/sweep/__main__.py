@@ -3,11 +3,17 @@
   python -m repro.sweep run <spec.json | builtin-name> [options]
   python -m repro.sweep list
   python -m repro.sweep show <builtin-name>
+  python -m repro.sweep cache [dir] [--prune]
 
 ``run`` prints a per-phase progress log, a ``name,value`` CSV summary
 block, and writes the campaign record JSON (default:
 ``benchmarks/artifacts/campaigns/<name>.json`` when run from the repo
-root, else ``./<name>.campaign.json``).
+root, else ``./<name>.campaign.json``) plus a per-point JSONL journal
+next to it. ``--backend spool`` routes refinement through a resumable
+filesystem job spool (see ``python -m repro.exec worker``): kill the
+run, re-invoke it, and only never-finished points are re-simulated.
+``cache`` reports entry count / size / lifetime hit-rate for a result
+cache and ``--prune`` drops entries from older schema generations.
 """
 from __future__ import annotations
 
@@ -49,15 +55,22 @@ def cmd_run(args: argparse.Namespace) -> int:
     cache_dir = None
     if not args.no_cache:
         cache_dir = args.cache_dir or spec.cache_dir or DEFAULT_CACHE_DIR
+    out = args.out or _default_out(spec.name)
+    journal = args.journal
+    if journal is None:
+        base = out[:-len(".json")] if out.endswith(".json") else out
+        journal = base + ".journal.jsonl"
     res = run_campaign(spec, workers=args.workers,
                        use_cache=not args.no_cache, cache_dir=cache_dir,
+                       backend=args.backend, spool_dir=args.spool_dir,
+                       journal_path=journal,
                        progress=lambda m: print(f"  [{spec.name}] {m}"))
-    out = args.out or _default_out(spec.name)
     save_result(res, out)
     s = res.summary
     print(f"campaign,{spec.name},")
     print(f"grid_points,{s['grid_points']},{s['cells']} cells")
     print(f"prescreen_s,{s['prescreen_s']:.3g},one XLA call per cell")
+    print(f"backend,{s['backend']},")
     print(f"refined,{s['refined']},{s['cache_hits']} cache hits / "
           f"{s['simulated']} simulated")
     print(f"refine_s,{s['refine_s']:.3g},")
@@ -69,6 +82,7 @@ def cmd_run(args: argparse.Namespace) -> int:
         print(f"best_time_ns,{b['time_ns']:.6g},"
               f"{b['workload']} {b['overrides']}")
     print(f"artifact,{out},")
+    print(f"journal,{journal},")
     return 0
 
 
@@ -92,6 +106,29 @@ def cmd_show(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_cache(args: argparse.Namespace) -> int:
+    from .cache import ResultCache, SCHEMA_VERSION
+
+    cache = ResultCache(args.dir)
+    st = cache.stats()
+    print(f"cache_dir,{args.dir},")
+    print(f"entries,{st['entries']},")
+    print(f"bytes,{st['bytes']},")
+    current = st["by_schema"].get(SCHEMA_VERSION, 0)
+    stale = st["entries"] - current
+    print(f"schema_current,{current},schema v{SCHEMA_VERSION}")
+    print(f"schema_stale,{stale},older/untagged generations")
+    life = cache.lifetime_stats()
+    if life["runs"]:
+        print(f"lifetime_hits,{life['hits']},over {life['runs']} campaigns")
+        print(f"lifetime_misses,{life['misses']},")
+        print(f"hit_rate,{life['hit_rate']:.3f},")
+    if args.prune:
+        removed = cache.prune()
+        print(f"pruned,{removed},stale entries removed")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sweep",
                                  description=__doc__)
@@ -99,9 +136,21 @@ def main(argv=None) -> int:
 
     rp = sub.add_parser("run", help="execute a campaign")
     rp.add_argument("spec", help="spec JSON path or builtin name")
+    rp.add_argument("--backend", choices=("inline", "pool", "spool"),
+                    default=None,
+                    help="refinement execution service (default: inferred "
+                         "from --workers: 0/1 inline, else pool)")
     rp.add_argument("--workers", type=int, default=None,
                     help="refinement worker processes "
-                         "(default: one per core; 0 = inline)")
+                         "(default: one per core; 0 = inline; with "
+                         "--backend spool: locally spawned spool workers, "
+                         "0 = external workers only)")
+    rp.add_argument("--spool-dir", default=None,
+                    help="spool backend job directory (default: "
+                         "<cache-root>/spool/<campaign>)")
+    rp.add_argument("--journal", default=None,
+                    help="per-point JSONL journal path "
+                         "(default: <out>.journal.jsonl)")
     rp.add_argument("--no-cache", action="store_true",
                     help="ignore + don't write the result cache")
     rp.add_argument("--cache-dir", default=None)
@@ -116,6 +165,13 @@ def main(argv=None) -> int:
     sp = sub.add_parser("show", help="print a spec as JSON")
     sp.add_argument("spec")
     sp.set_defaults(fn=cmd_show)
+
+    cp = sub.add_parser("cache", help="result-cache stats / maintenance")
+    cp.add_argument("dir", nargs="?", default=DEFAULT_CACHE_DIR,
+                    help=f"cache directory (default: {DEFAULT_CACHE_DIR})")
+    cp.add_argument("--prune", action="store_true",
+                    help="delete entries from other schema generations")
+    cp.set_defaults(fn=cmd_cache)
 
     args = ap.parse_args(argv)
     return args.fn(args)

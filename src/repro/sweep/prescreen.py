@@ -19,7 +19,7 @@ from ..core.vectorized import (ENG_DMA, ENG_ICI, ENG_MXU, ENG_VPU,
                                N_ENGINE_CLASSES, from_tasks, params_of,
                                schedule_many_stats)
 from ..graph.compiler import CompileOptions, compile_ops
-from ..graph.workloads import WORKLOADS
+from ..graph.workloads import resolve_workload
 from ..power.powerem import analytic_power_w
 from .spec import SweepCell
 
@@ -53,7 +53,7 @@ def prescreen_cell(cell: SweepCell) -> CellPrescreen:
     t0 = time.time()
     spec = cell.spec
     cfg0 = cell.base_cfg()
-    ops = WORKLOADS[cell.workload]()
+    ops = resolve_workload(cell.workload)()
     cw = compile_ops(ops, cfg0,
                      CompileOptions(n_tiles=cell.n_tiles,
                                     **spec.compile_opts))

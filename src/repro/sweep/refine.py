@@ -9,7 +9,7 @@ from __future__ import annotations
 from typing import Any, Dict
 
 from ..graph.compiler import CompileOptions, compile_ops
-from ..graph.workloads import WORKLOADS
+from ..graph.workloads import resolve_workload
 from ..hw.chip import System
 from ..hw.presets import from_dict
 from ..power.powerem import PowerEM
@@ -30,7 +30,7 @@ def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
     """Compile + event-simulate + Power-EM one hardware point."""
     cfg = from_dict(payload["hw"])
     nt = payload["n_tiles"]
-    ops = WORKLOADS[payload["workload"]]()
+    ops = resolve_workload(payload["workload"])()
     cw = compile_ops(ops, cfg,
                      CompileOptions(n_tiles=nt, **payload["compile_opts"]))
     sysm = System(cfg, n_tiles=nt)

@@ -1,42 +1,61 @@
-"""Campaign runner: pre-screen -> select -> cached parallel refinement.
+"""Campaign runner: pre-screen -> select -> cached backend refinement.
 
 ``run_campaign`` is the one entrypoint every sweep benchmark drives:
 
 * expands the spec into structural cells,
 * pre-screens each cell's full analytic sub-grid in one batched XLA call,
 * selects the Pareto-interesting points per cell,
-* refines only those on the ground-truth event engine + Power-EM — in
-  parallel ``spawn`` worker processes (the refinement import path is
-  jax-free, see ``refine.py``) behind a content-hashed on-disk cache,
+* refines only those on the ground-truth event engine + Power-EM through
+  a pluggable execution **backend** (``repro.exec``: inline / local
+  process pool / resumable filesystem job spool) behind a content-hashed
+  on-disk cache,
+* journals per-point progress (status, wall time, worker id, cache-hit
+  counters) to an append-only JSONL stream,
 * returns uniform JSON-ready campaign records that ``benchmarks/report``
   renders and downstream analyses (DVFS policy picks, scaling summaries)
   post-process.
+
+Records are canonicalized through a JSON round-trip before they enter a
+result, so inline, pool, and spool backends — and cached re-runs —
+produce byte-identical campaign records for the same spec.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-import multiprocessing as mp
 import os
 import time
-import warnings
-from concurrent.futures import ProcessPoolExecutor
-from concurrent.futures.process import BrokenProcessPool
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
+# fresh records are canonicalized (JSON round-trip, sorted keys) so
+# in-memory results match cache/spool-served ones byte-for-byte
+from ..exec.backend import Backend, canonical as _canon, get_backend
+from ..exec.journal import CampaignJournal
 from ..hw.presets import to_dict
 from .cache import ResultCache, content_key
 from .pareto import select_points
 from .prescreen import prescreen_cell
-from .refine import refine_payload, refine_point
+from .refine import refine_payload
 from .spec import SweepSpec
 
-__all__ = ["CampaignResult", "run_campaign", "save_result", "load_result"]
+__all__ = ["CampaignResult", "run_campaign", "save_result", "load_result",
+           "default_spool_dir"]
 
 RESULT_SCHEMA = 1
+
+
+def _best(records: List[Dict[str, Any]], key: str
+          ) -> Optional[Dict[str, Any]]:
+    """Deterministic argmin over refined records: ties on the metric are
+    broken by grid index, so reports are stable across runs/backends."""
+    refined = [r for r in records if r.get("refined")]
+    if not refined:
+        return None
+    return min(refined,
+               key=lambda r: (r[key], r.get("grid_index", len(records))))
 
 
 @dataclass
@@ -54,10 +73,7 @@ class CampaignResult:
         return [r for r in self.records if r["refined"]]
 
     def best(self, key: str = "time_ns") -> Optional[Dict[str, Any]]:
-        refined = self.refined
-        if not refined:
-            return None
-        return min(refined, key=lambda r: r[key])
+        return _best(self.records, key)
 
 
 def save_result(res: CampaignResult, path: str) -> str:
@@ -75,37 +91,61 @@ def load_result(path: str) -> CampaignResult:
                           schema=d.get("schema", RESULT_SCHEMA))
 
 
+def default_spool_dir(campaign: str, cache_dir: Optional[str]) -> str:
+    """Deterministic spool location so an interrupted campaign and its
+    re-invocation agree on where surviving jobs/results live."""
+    root = os.path.dirname(cache_dir) if cache_dir else "."
+    return os.path.join(root, "spool", campaign)
+
+
 def _log(progress: Optional[Callable[[str], None]], msg: str) -> None:
     if progress:
         progress(msg)
 
 
-def _mp_method() -> str:
-    """Worker start method. ``fork`` where available: refinement workers
-    never touch jax (see refine.py), fork skips the __main__ re-import
-    spawn needs and starts in ~ms. Override with SWEEP_MP_CONTEXT."""
-    env = os.environ.get("SWEEP_MP_CONTEXT")
-    if env:
-        return env
-    return "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+
+
+def _resolve_backend(backend: Union[str, Backend, None],
+                     workers: Optional[int], spec: SweepSpec,
+                     cache_dir: Optional[str],
+                     spool_dir: Optional[str]) -> Backend:
+    if backend is not None and not isinstance(backend, str):
+        return backend
+    if backend is None:
+        # legacy ``workers`` semantics: 0/1 inline, else local pool
+        backend = "inline" if workers is not None and workers <= 1 else "pool"
+    if backend == "spool" and not spool_dir:
+        spool_dir = default_spool_dir(spec.name, cache_dir)
+    return get_backend(backend, workers=workers, spool_dir=spool_dir)
 
 
 def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
                  use_cache: bool = True,
                  cache_dir: Optional[str] = None,
-                 progress: Optional[Callable[[str], None]] = None
-                 ) -> CampaignResult:
+                 progress: Optional[Callable[[str], None]] = None,
+                 backend: Union[str, Backend, None] = None,
+                 spool_dir: Optional[str] = None,
+                 journal_path: Optional[str] = None) -> CampaignResult:
     """Execute one campaign.
 
-    ``workers=0`` refines inline (deterministic, test-friendly);
-    ``workers=None`` uses one process per core; ``workers=N`` caps the
-    pool. The cache (``cache_dir`` or ``spec.cache_dir``) makes repeated
-    campaigns incremental; pass ``use_cache=False`` to force re-runs.
+    ``backend`` picks the refinement execution service: ``"inline"``
+    (deterministic, test-friendly), ``"pool"`` (``workers`` local
+    processes; None = one per core), ``"spool"`` (resumable filesystem
+    job queue at ``spool_dir``, drained by ``workers`` spawned daemons
+    plus any externally attached ``python -m repro.exec worker``), or a
+    ready ``repro.exec`` Backend instance. When ``backend`` is None the
+    legacy ``workers`` convention applies: 0/1 inline, else pool.
+
+    The cache (``cache_dir`` or ``spec.cache_dir``) makes repeated and
+    interrupted campaigns incremental; ``journal_path`` streams
+    per-point status/wall-time/worker telemetry as JSONL.
     """
     t_start = time.time()
     cells = spec.cells()
     cdir = cache_dir or spec.cache_dir
     cache = ResultCache(cdir) if (use_cache and cdir) else None
+    bk = _resolve_backend(backend, workers, spec, cdir, spool_dir)
+    journal = CampaignJournal(journal_path) if journal_path else None
 
     # -- phase 1: batched analytic pre-screen (one XLA call per cell) ----
     t0 = time.time()
@@ -130,6 +170,7 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
             cfg = pt.cfg(spec)
             rec: Dict[str, Any] = {
                 "point_id": pt.point_id(),
+                "grid_index": len(records),
                 "campaign": spec.name,
                 "workload": pt.workload,
                 "n_tiles": pt.n_tiles,
@@ -156,12 +197,15 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         _log(progress, f"select {cell.label}: {len(picked)}/"
              f"{len(cell.points)} points for event-engine refinement")
 
-    # -- phase 3: cached, parallel event-engine refinement ---------------
+    # -- phase 3: cached backend refinement ------------------------------
     t0 = time.time()
+    keys = [content_key(p) for p in todo]
+    if journal:
+        journal.start(campaign=spec.name, backend=bk.name,
+                      grid_points=len(records), to_refine=len(todo))
     cache_hits = 0
     misses: List[int] = []                 # indices into todo
     results: List[Optional[Dict[str, Any]]] = [None] * len(todo)
-    keys = [content_key(p) for p in todo]
     if cache is not None:
         for i, key in enumerate(keys):
             hit = cache.get(key)
@@ -169,39 +213,24 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
                 results[i] = hit
                 records[todo_idx[i]]["cached"] = True
                 cache_hits += 1
+                if journal:
+                    journal.point(
+                        key, "cached",
+                        point_id=records[todo_idx[i]]["point_id"])
             else:
                 misses.append(i)
     else:
         misses = list(range(len(todo)))
 
     if misses:
-        n_workers = workers if workers is not None else (os.cpu_count() or 1)
-        fresh: Optional[List[Dict[str, Any]]] = None
-        if n_workers and n_workers > 1 and len(misses) > 1:
-            try:
-                ctx = mp.get_context(_mp_method())
-                with warnings.catch_warnings():
-                    # jax warns about fork+threads; refinement workers
-                    # never re-enter jax/XLA (refine.py is jax-free)
-                    warnings.filterwarnings(
-                        "ignore", message=".*os.fork.*",
-                        category=RuntimeWarning)
-                    with ProcessPoolExecutor(
-                            max_workers=min(n_workers, len(misses)),
-                            mp_context=ctx) as pool:
-                        fresh = list(pool.map(refine_point,
-                                              [todo[i] for i in misses]))
-            except BrokenProcessPool:
-                # e.g. spawn re-importing an unguarded __main__ —
-                # refinement is pure, so just run inline
-                _log(progress, "worker pool unavailable; refining inline")
-                fresh = None
-        if fresh is None:
-            fresh = [refine_point(todo[i]) for i in misses]
+        _log(progress, f"refine: {len(misses)} points via {bk.name} backend")
+        # the backend owns cache write-through (each record is persisted
+        # as soon as it is refined, not after the batch) — no second put
+        fresh = bk.refine([todo[i] for i in misses],
+                          keys=[keys[i] for i in misses],
+                          journal=journal, cache=cache, progress=progress)
         for i, rec in zip(misses, fresh):
-            results[i] = rec
-            if cache is not None:
-                cache.put(keys[i], rec)
+            results[i] = _canon(rec)
     refine_s = time.time() - t0
 
     deviations = []
@@ -221,6 +250,7 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         "grid_points": len(records),
         "cells": len(cells),
         "prescreen_calls": len(cells),
+        "backend": bk.name,
         "refined": len(todo),
         "cache_hits": cache_hits,
         "simulated": len(misses),
@@ -230,16 +260,20 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         "deviation_min": min(deviations) if deviations else None,
         "deviation_max": max(deviations) if deviations else None,
     }
-    best = min((r for r in records if r["refined"]),
-               key=lambda r: r["time_ns"], default=None)
+    best = _best(records, "time_ns")
     if best is not None:
         summary["best_time_point"] = {
             "point_id": best["point_id"], "workload": best["workload"],
             "overrides": best["overrides"], "time_ns": best["time_ns"]}
-        beste = min((r for r in records if r["refined"]),
-                    key=lambda r: r["energy_j"])
+        beste = _best(records, "energy_j")
         summary["best_energy_point"] = {
             "point_id": beste["point_id"], "workload": beste["workload"],
             "overrides": beste["overrides"], "energy_j": beste["energy_j"]}
+    if cache is not None:
+        cache.log_stats(campaign=spec.name)
+    if journal:
+        journal.end({k: summary[k] for k in
+                     ("grid_points", "refined", "cache_hits", "simulated",
+                      "backend", "wall_s")})
     return CampaignResult(spec=spec.to_dict(), records=records,
                           summary=summary)

@@ -22,7 +22,7 @@ import os
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-from ..graph.workloads import WORKLOADS
+from ..graph.workloads import is_workload, lm_grid_names
 from ..hw.presets import HwConfig, resolve_preset
 from ..power.characterization import NOMINAL_TEMP_C
 
@@ -68,7 +68,7 @@ class SweepSpec:
     """One campaign: workloads x preset x grid (+ refinement policy)."""
 
     name: str
-    workloads: List[str]
+    workloads: List[str] = field(default_factory=list)
     preset: str = "paper_skew"
     base: Dict[str, Any] = field(default_factory=dict)
     axes: Dict[str, List[Any]] = field(default_factory=dict)
@@ -77,16 +77,37 @@ class SweepSpec:
     refine: RefineSpec = field(default_factory=RefineSpec)
     cache_dir: Optional[str] = None
     description: str = ""
+    # LM workload grid: {"arch": ..., "seq": [...], "batch": [...],
+    # "tp": [...]} — expands into ``lm/<arch>/s<S>b<B>tp<T>`` workloads
+    # (each combination is its own structural cell)
+    lm_grid: Optional[Dict[str, Any]] = None
 
     def __post_init__(self):
         if isinstance(self.refine, dict):
             self.refine = RefineSpec(**self.refine)
         if isinstance(self.n_tiles, int):
             self.n_tiles = [self.n_tiles]
-        unknown = [w for w in self.workloads if w not in WORKLOADS]
+        if self.lm_grid:
+            g = {k: [v] if isinstance(v, int) else v
+                 for k, v in self.lm_grid.items()}   # scalar convenience
+            try:
+                names = lm_grid_names(g.pop("arch"), g.pop("seq"),
+                                      g.pop("batch"), g.pop("tp"))
+            except KeyError as e:
+                raise KeyError(f"lm_grid needs arch/seq/batch/tp, "
+                               f"missing {e.args[0]!r}") from None
+            if g:
+                raise KeyError(f"unknown lm_grid keys {sorted(g)}")
+            # idempotent: to_dict/from_dict round-trips re-expand the
+            # same names, so only append ones not already present
+            self.workloads = list(self.workloads) + \
+                [n for n in names if n not in self.workloads]
+        if not self.workloads:
+            raise ValueError("spec needs workloads (or a non-empty lm_grid)")
+        unknown = [w for w in self.workloads if not is_workload(w)]
         if unknown:
-            raise KeyError(f"unknown workloads {unknown}; "
-                           f"have {sorted(WORKLOADS)}")
+            raise KeyError(f"unknown workloads {unknown}; have builtin "
+                           f"CNNs or 'lm/<arch>/s<seq>b<batch>tp<tp>'")
         bad = [a for a in list(self.axes) + list(self.base)
                if a not in _HW_FIELDS]
         if bad:

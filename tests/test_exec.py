@@ -1,0 +1,460 @@
+"""Execution-service subsystem: spool lifecycle (claim exclusivity,
+lease expiry/reclamation, kill-and-resume), journal, backends."""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.exec import (CampaignJournal, InlineBackend, Spool, SpoolBackend,
+                        get_backend, run_worker)
+from repro.exec.backend import BackendError
+from repro.sweep import RefineSpec, SweepSpec
+from repro.sweep.runner import run_campaign
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _small_spec(**kw):
+    base = dict(
+        name="exec_campaign",
+        workloads=["mobilenet_v2"],
+        preset="paper_skew",
+        axes={"clock_ghz": [0.5, 1.0]},
+        n_tiles=[2],
+        refine=RefineSpec(mode="all"),
+    )
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+# -- spool primitives ------------------------------------------------------
+
+def test_spool_submit_idempotent(tmp_path):
+    spool = Spool(str(tmp_path / "sp"))
+    assert spool.submit("k1", {"x": 1})
+    assert not spool.submit("k1", {"x": 1})       # already pending
+    assert spool.counts() == {"jobs": 1, "active": 0, "done": 0,
+                              "failed": 0}
+    job = spool.claim("w0")
+    assert job.key == "k1" and job.payload == {"x": 1}
+    assert not spool.submit("k1", {"x": 1})       # already claimed
+    spool.complete(job, {"y": 2}, wall_s=0.1)
+    assert not spool.submit("k1", {"x": 1})       # already done
+    assert spool.result("k1")["record"] == {"y": 2}
+    assert spool.result("k1")["worker"] == "w0"
+
+
+def test_spool_claim_exclusive_under_concurrency(tmp_path):
+    """Many threads racing claim(): every job is claimed exactly once."""
+    spool = Spool(str(tmp_path / "sp"))
+    n_jobs, n_workers = 40, 8
+    for i in range(n_jobs):
+        spool.submit(f"job{i:03d}", {"i": i})
+    claims = {w: [] for w in range(n_workers)}
+
+    def drain(w):
+        s = Spool(str(tmp_path / "sp"))
+        while True:
+            job = s.claim(f"w{w}")
+            if job is None:
+                break
+            claims[w].append(job.key)
+
+    threads = [threading.Thread(target=drain, args=(w,))
+               for w in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    all_claims = [k for ks in claims.values() for k in ks]
+    assert len(all_claims) == n_jobs
+    assert len(set(all_claims)) == n_jobs          # no double-claims
+    assert spool.counts()["jobs"] == 0
+
+
+def test_spool_lease_expiry_and_reclaim(tmp_path):
+    spool = Spool(str(tmp_path / "sp"), lease_s=60.0)
+    spool.submit("k1", {"x": 1})
+    job = spool.claim("dead-worker")
+    assert spool.claim("w2") is None               # queue drained
+    # a live heartbeat keeps the lease
+    assert job.heartbeat()
+    assert spool.reclaim() == 0
+    # backdate the heartbeat past the lease -> reclaimed
+    old = time.time() - 120.0
+    os.utime(job.active_path, (old, old))
+    assert spool.reclaim() == 1
+    job2 = spool.claim("w2")
+    assert job2 is not None and job2.key == "k1"
+    # the dead worker finishing late must not clobber anything: its
+    # release is a no-op (file moved), w2's completion wins
+    spool.complete(job2, {"by": "w2"}, wall_s=0.0)
+    assert spool.result("k1")["record"] == {"by": "w2"}
+
+
+def test_spool_claim_restarts_lease_clock(tmp_path):
+    """Claiming a job file older than the lease (a resumed spool) must
+    not leave the claim instantly reclaimable: rename preserves the old
+    mtime, so claim() restarts the lease clock explicitly."""
+    spool = Spool(str(tmp_path / "sp"), lease_s=60.0)
+    spool.submit("k1", {"x": 1})
+    old = time.time() - 3600.0
+    os.utime(os.path.join(spool.root, "jobs", "k1.json"), (old, old))
+    job = spool.claim("w0")
+    assert job is not None
+    assert spool.reclaim() == 0                    # lease began at claim
+    spool.complete(job, {}, wall_s=0.0)
+    # once done, a stale duplicate in jobs/ is dropped at claim time
+    with open(os.path.join(spool.root, "jobs", "k1.json"), "w") as f:
+        json.dump({"key": "k1", "payload": {"x": 1}}, f)
+    assert spool.claim("w1") is None
+    assert spool.counts()["jobs"] == 0
+
+
+def test_spool_reclaim_skips_finished_jobs(tmp_path):
+    """A worker that completed but died before releasing its claim must
+    not cause re-execution: reclaim drops the stale claim."""
+    spool = Spool(str(tmp_path / "sp"))
+    spool.submit("k1", {"x": 1})
+    job = spool.claim("w0")
+    # complete without releasing (simulates dying between the two steps)
+    from repro.exec.spool import _publish
+    _publish(os.path.join(spool.root, "done"), "k1",
+             {"key": "k1", "record": {"r": 1}, "worker": "w0",
+              "wall_s": 0.0, "t_done": 0.0})
+    old = time.time() - 1e4
+    os.utime(job.active_path, (old, old))
+    assert spool.reclaim() == 0                    # dropped, not requeued
+    assert spool.counts()["jobs"] == 0
+    assert spool.result("k1")["record"] == {"r": 1}
+
+
+def test_spool_torn_job_file_fails_fast(tmp_path):
+    """A corrupt job file must surface as a failure (so a waiting
+    backend errors out instead of hanging), and not block other jobs."""
+    spool = Spool(str(tmp_path / "sp"))
+    with open(os.path.join(spool.root, "jobs", "bad.json"), "w") as f:
+        f.write('{"key": "bad", "payl')          # torn mid-write
+    spool.submit("good", {"x": 1})
+    keys = []
+    while True:
+        job = spool.claim("w0")
+        if job is None:
+            break
+        keys.append(job.key)
+        spool.complete(job, {}, wall_s=0.0)
+    assert keys == ["good"]
+    assert spool.counts()["jobs"] == 0
+    assert "corrupt" in spool.failure("bad")["error"]
+    assert spool.submit("bad", {"x": 2})         # retriable
+
+
+def test_spool_failed_job_is_retried_on_resubmit(tmp_path):
+    spool = Spool(str(tmp_path / "sp"))
+    spool.submit("k1", {"x": 1})
+    job = spool.claim("w0")
+    spool.fail(job, "boom")
+    assert spool.failure("k1")["error"] == "boom"
+    assert spool.submit("k1", {"x": 1})            # retry clears failure
+    assert spool.failure("k1") is None
+    assert spool.counts()["jobs"] == 1
+
+
+# -- worker loop -----------------------------------------------------------
+
+def test_run_worker_drains_and_publishes(tmp_path):
+    root = str(tmp_path / "sp")
+    spool = Spool(root)
+    for i in range(5):
+        spool.submit(f"j{i}", {"i": i})
+    n = run_worker(root, worker="w0", hb_s=0.05,
+                   refine_fn=lambda p: {"out": p["i"] * 2})
+    assert n == 5
+    counts = spool.counts()
+    assert counts["done"] == 5 and counts["jobs"] == 0
+    assert counts["active"] == 0
+    for i in range(5):
+        res = spool.result(f"j{i}")
+        assert res["record"] == {"out": i * 2}
+        assert res["worker"] == "w0"
+        assert res["wall_s"] >= 0
+
+
+def test_run_worker_records_failures(tmp_path):
+    root = str(tmp_path / "sp")
+    spool = Spool(root)
+    spool.submit("ok", {"i": 1})
+    spool.submit("boom", {"i": -1})
+
+    def refine(p):
+        if p["i"] < 0:
+            raise ValueError("negative")
+        return {"ok": True}
+
+    n = run_worker(root, worker="w0", refine_fn=refine)
+    assert n == 1
+    assert spool.result("ok")["record"] == {"ok": True}
+    assert "negative" in spool.failure("boom")["error"]
+
+
+def test_run_worker_heartbeat_keeps_lease(tmp_path):
+    """A slow job heartbeats fast enough that an aggressive janitor
+    never reclaims it."""
+    root = str(tmp_path / "sp")
+    spool = Spool(root, lease_s=0.3)
+    spool.submit("slow", {"i": 0})
+    reclaims = []
+
+    def slow_refine(p):
+        for _ in range(4):
+            time.sleep(0.15)
+            reclaims.append(spool.reclaim(lease_s=0.3))
+        return {"done": True}
+
+    run_worker(root, worker="w0", hb_s=0.05, refine_fn=slow_refine)
+    assert sum(reclaims) == 0
+    assert spool.result("slow")["record"] == {"done": True}
+
+
+# -- journal ---------------------------------------------------------------
+
+def test_journal_roundtrip_and_all_done(tmp_path):
+    p = str(tmp_path / "j.jsonl")
+    j = CampaignJournal(p)
+    j.start(campaign="c", backend="spool", grid_points=4, to_refine=3)
+    j.point("k1", "cached", point_id="p1")
+    j.point("k2", "done", worker="w0", wall_s=0.5)
+    j.point("k3", "failed", worker="w1", error="boom")
+    j.end({"refined": 3, "cache_hits": 1, "simulated": 2})
+    view = CampaignJournal.load(p)
+    c = view.counts()
+    assert c == {"done": 1, "cached": 1, "failed": 1, "other": 0,
+                 "total": 3}
+    assert view.cache_hits() == 1 and view.simulated() == 1
+    assert not view.all_done()                     # one failed
+    assert view.summary["cache_hits"] == 1
+    # torn tail line (killed writer) is tolerated
+    with open(p, "a") as f:
+        f.write('{"ev": "point", "key": "k4"')
+    assert CampaignJournal.load(p).counts()["total"] == 3
+
+
+def test_journal_all_done_happy_path(tmp_path):
+    p = str(tmp_path / "j.jsonl")
+    j = CampaignJournal(p)
+    j.start(campaign="c", backend="inline", grid_points=2, to_refine=2)
+    j.point("k1", "done", worker="inline", wall_s=0.1)
+    j.point("k2", "cached")
+    j.end({"refined": 2})
+    assert CampaignJournal.load(p).all_done()
+    assert not CampaignJournal.load(p).all_done(min_points=3)
+
+
+# -- backend factory -------------------------------------------------------
+
+def test_get_backend():
+    assert isinstance(get_backend("inline"), InlineBackend)
+    assert get_backend("pool", workers=2).name == "pool"
+    bk = get_backend("spool", workers=0, spool_dir="/tmp/x")
+    assert bk.name == "spool" and bk.workers == 0
+    with pytest.raises(ValueError):
+        get_backend("spool")                       # needs spool_dir
+    with pytest.raises(ValueError):
+        get_backend("carrier-pigeon")
+
+
+# -- campaign-level behavior ----------------------------------------------
+
+def _drain_in_thread(root, refine_fn=None):
+    """Background in-process spool worker; runs until told to stop."""
+    from repro.sweep.refine import refine_point
+
+    fn = refine_fn or refine_point
+    stop = threading.Event()
+
+    def loop():
+        while not stop.is_set():
+            n = run_worker(root, worker="thread-w", hb_s=0.2, refine_fn=fn)
+            if n == 0:
+                time.sleep(0.05)
+
+    t = threading.Thread(target=loop, daemon=True)
+    t.start()
+    return t, stop
+
+
+def test_campaign_spool_backend_matches_inline(tmp_path):
+    """Acceptance: inline and spool backends produce identical campaign
+    records (spool drained by an in-process worker; no subprocesses)."""
+    spec = _small_spec()
+    inline = run_campaign(spec, workers=0, use_cache=False)
+    root = str(tmp_path / "spool")
+    t, stop = _drain_in_thread(root)
+    bk = SpoolBackend(root, workers=0, poll_s=0.05, timeout_s=120)
+    spooled = run_campaign(spec, backend=bk, use_cache=False,
+                           journal_path=str(tmp_path / "j.jsonl"))
+    stop.set()
+    t.join(timeout=10)
+    assert spooled.records == inline.records
+    assert json.dumps(spooled.records) == json.dumps(inline.records)
+    assert spooled.summary["backend"] == "spool"
+    view = CampaignJournal.load(str(tmp_path / "j.jsonl"))
+    assert view.all_done()
+    assert {e["worker"] for e in view.points.values()} == {"thread-w"}
+
+
+def test_campaign_spool_resume_skips_done_jobs(tmp_path):
+    """Kill-and-resume at the spool level: results that survived a dead
+    runner are collected without re-simulation."""
+    spec = _small_spec()
+    root = str(tmp_path / "spool")
+    jpath = str(tmp_path / "j.jsonl")
+
+    # first (interrupted) run: drain the spool, then throw away the
+    # runner's result — exactly what a SIGKILLed runner leaves behind
+    t, stop = _drain_in_thread(root)
+    run_campaign(spec, backend=SpoolBackend(root, workers=0, poll_s=0.05,
+                                            timeout_s=120),
+                 use_cache=False)
+    stop.set()
+    t.join(timeout=10)
+    assert Spool(root).counts()["done"] == 2
+
+    # resume: only a tripwire worker attached — the surviving done
+    # files must be the sole source of records
+    calls = []
+    t2, stop2 = _drain_in_thread(root,
+                                 refine_fn=lambda p: calls.append(p) or {})
+    res = run_campaign(spec, backend=SpoolBackend(root, workers=0,
+                                                  poll_s=0.05,
+                                                  timeout_s=60),
+                       use_cache=False, journal_path=jpath)
+    stop2.set()
+    t2.join(timeout=10)
+    assert calls == []                             # zero re-simulation
+    assert len(res.refined) == 2
+    assert CampaignJournal.load(jpath).all_done()
+
+
+def test_campaign_resume_via_cache_counters(tmp_path):
+    """Acceptance: a re-invoked campaign completes with zero
+    re-simulation, verified via the cache-hit counters in the journal."""
+    spec = _small_spec(cache_dir=str(tmp_path / "cache"))
+    j1, j2 = str(tmp_path / "j1.jsonl"), str(tmp_path / "j2.jsonl")
+    run_campaign(spec, workers=0, journal_path=j1)
+    res = run_campaign(spec, workers=0, journal_path=j2)
+    v1, v2 = CampaignJournal.load(j1), CampaignJournal.load(j2)
+    assert v1.summary["simulated"] == 2 and v1.summary["cache_hits"] == 0
+    assert v2.summary["simulated"] == 0 and v2.summary["cache_hits"] == 2
+    assert v2.all_done() and v2.counts()["cached"] == 2
+    assert all(r["cached"] for r in res.refined)
+
+
+def test_backends_write_through_to_cache(tmp_path):
+    """Each record lands in the result cache as soon as it is refined —
+    a runner killed mid-batch loses nothing already simulated."""
+    from repro.sweep.cache import ResultCache
+
+    class SpyCache(ResultCache):
+        def __init__(self, root):
+            super().__init__(root)
+            self.put_order = []
+
+        def put(self, key, record):
+            self.put_order.append(key)
+            return super().put(key, record)
+
+    root = str(tmp_path / "sp")
+    cache = SpyCache(str(tmp_path / "cache"))
+    t, stop = _drain_in_thread(root, refine_fn=lambda p: {"v": p["i"]})
+    bk = SpoolBackend(root, workers=0, poll_s=0.05, timeout_s=60)
+    recs = bk.refine([{"i": 1}, {"i": 2}], keys=["ka", "kb"], cache=cache)
+    stop.set()
+    t.join(timeout=10)
+    assert recs == [{"v": 1}, {"v": 2}]
+    assert sorted(cache.put_order) == ["ka", "kb"]
+    assert cache.get("ka") == {"v": 1}             # durable on disk
+
+
+def test_spool_backend_surfaces_failures(tmp_path):
+    root = str(tmp_path / "sp")
+    spool = Spool(root)
+    bk = SpoolBackend(root, workers=0, poll_s=0.05, timeout_s=60)
+
+    def explode(p):
+        raise ValueError("no")
+
+    t, stop = _drain_in_thread(root, refine_fn=explode)
+    with pytest.raises(BackendError, match="failed"):
+        bk.refine([{"p": 1}], keys=["kf"])
+    stop.set()
+    t.join(timeout=10)
+    assert spool.failure("kf") is not None
+
+
+# -- subprocess integration (slow lane) ------------------------------------
+
+@pytest.mark.slow
+def test_worker_cli_end_to_end(tmp_path):
+    """`python -m repro.exec worker` drains a spool populated by a
+    spool-backend campaign with workers=0, plus status/journal CLIs."""
+    spec = _small_spec(name="cli_exec")
+    root = str(tmp_path / "spool")
+    jpath = str(tmp_path / "j.jsonl")
+
+    done = {}
+
+    def run():
+        done["res"] = run_campaign(
+            spec, backend=SpoolBackend(root, workers=0, poll_s=0.1,
+                                       timeout_s=240),
+            use_cache=False, journal_path=jpath)
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    deadline = time.time() + 120
+    while time.time() < deadline and not os.path.isdir(
+            os.path.join(root, "jobs")):
+        time.sleep(0.1)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.exec", "worker", root],
+        capture_output=True, text=True, timeout=240, env=_env())
+    assert r.returncode == 0, r.stderr
+    t.join(timeout=120)
+    assert not t.is_alive()
+    assert len(done["res"].refined) == 2
+
+    r2 = subprocess.run(
+        [sys.executable, "-m", "repro.exec", "status", root],
+        capture_output=True, text=True, timeout=60, env=_env())
+    assert r2.returncode == 0 and "done,2" in r2.stdout
+    r3 = subprocess.run(
+        [sys.executable, "-m", "repro.exec", "journal", jpath,
+         "--expect-done"],
+        capture_output=True, text=True, timeout=60, env=_env())
+    assert r3.returncode == 0, r3.stdout
+    assert "all_done,True" in r3.stdout
+
+
+@pytest.mark.slow
+def test_campaign_spool_subprocess_workers_match_inline(tmp_path):
+    """Full stack: run_campaign(backend='spool', workers=2) spawns real
+    worker subprocesses and matches the inline records byte-for-byte."""
+    spec = _small_spec(name="sub_exec")
+    inline = run_campaign(spec, workers=0, use_cache=False)
+    sp = run_campaign(spec, backend="spool", workers=2, use_cache=False,
+                      spool_dir=str(tmp_path / "spool"),
+                      journal_path=str(tmp_path / "j.jsonl"))
+    assert json.dumps(sp.records) == json.dumps(inline.records)
+    view = CampaignJournal.load(str(tmp_path / "j.jsonl"))
+    assert view.all_done()

@@ -81,6 +81,86 @@ def test_builtin_specs_load():
     assert len(spec.cells()) == 1    # ... in ONE batched XLA call
 
 
+# -- LM workload grid ------------------------------------------------------
+
+def test_lm_grid_expands_workloads():
+    spec = SweepSpec(name="lm_t",
+                     lm_grid={"arch": "qwen3-32b", "seq": [64, 128],
+                              "batch": [1], "tp": [1, 2]},
+                     preset="v5e", axes={"clock_ghz": [0.5, 1.0]},
+                     n_tiles=[2])
+    assert spec.workloads == ["lm/qwen3-32b/s64b1tp1",
+                              "lm/qwen3-32b/s64b1tp2",
+                              "lm/qwen3-32b/s128b1tp1",
+                              "lm/qwen3-32b/s128b1tp2"]
+    assert spec.grid_size == 4 * 2
+    assert len(spec.cells()) == 4    # each lm point is its own cell
+    # to_dict/from_dict round-trip must not double-expand
+    spec2 = SweepSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert spec2.workloads == spec.workloads
+
+
+def test_lm_grid_scalar_convenience():
+    spec = SweepSpec(name="lm_s",
+                     lm_grid={"arch": "qwen3-32b", "seq": 64,
+                              "batch": 1, "tp": [1, 2]},
+                     preset="v5e", n_tiles=[2])
+    assert spec.workloads == ["lm/qwen3-32b/s64b1tp1",
+                              "lm/qwen3-32b/s64b1tp2"]
+
+
+def test_lm_grid_validation_errors():
+    with pytest.raises(KeyError):    # unknown arch
+        SweepSpec(name="x", lm_grid={"arch": "nope", "seq": [1],
+                                     "batch": [1], "tp": [1]})
+    with pytest.raises(KeyError):    # missing grid axes
+        SweepSpec(name="x", lm_grid={"arch": "qwen3-32b", "seq": [1]})
+    with pytest.raises(KeyError):    # stray key
+        SweepSpec(name="x", lm_grid={"arch": "qwen3-32b", "seq": [1],
+                                     "batch": [1], "tp": [1], "zz": 1})
+    with pytest.raises(ValueError):  # no workloads at all
+        SweepSpec(name="x", workloads=[])
+    with pytest.raises(KeyError):    # malformed lm name
+        SweepSpec(name="x", workloads=["lm/qwen3-32b/s64"])
+
+
+def test_builtin_lm_seq_tp_is_10k_points():
+    """Acceptance: the first LM campaign grids lm_layer_ops over
+    seq x batch x TP with >1e4 analytic points."""
+    spec = load_builtin_spec("lm_seq_tp")
+    assert spec.grid_size > 10_000
+    assert len(spec.workloads) == 4 * 3 * 4
+    assert all(w.startswith("lm/qwen3-32b/") for w in spec.workloads)
+    per_cell = spec.grid_size // (len(spec.workloads) * len(spec.n_tiles))
+    assert spec.refine.max_points < per_cell      # Pareto-pruned
+
+
+def test_lm_campaign_tp_collectives_end_to_end():
+    """A tiny LM campaign with tensor parallelism runs through
+    pre-screen AND event refinement; TP>1 adds ICI collective tasks."""
+    spec = SweepSpec(name="lm_tp",
+                     lm_grid={"arch": "qwen3-32b", "seq": [64],
+                              "batch": [1], "tp": [1, 2]},
+                     preset="v5e", axes={}, n_tiles=[2],
+                     refine=RefineSpec(mode="all"))
+    res = run_campaign(spec, workers=0, use_cache=False)
+    assert len(res.refined) == 2
+    for r in res.refined:
+        assert r["time_ns"] > 0 and r["energy_j"] > 0
+        assert r["analytic_time_ns"] > 0
+    # TP>1 compiles Megatron-style all-reduces onto the ICI fabric
+    from repro.graph.compiler import CompileOptions, compile_ops
+    from repro.graph.workloads import resolve_workload
+    from repro.hw.presets import resolve_preset
+
+    cfg = resolve_preset("v5e")
+    opts = CompileOptions(n_tiles=2)
+    n_ici = {tp: sum(t.engine == "ici" for t in compile_ops(
+        resolve_workload(f"lm/qwen3-32b/s64b1tp{tp}")(), cfg, opts).tasks)
+        for tp in (1, 2)}
+    assert n_ici == {1: 0, 2: 2}
+
+
 # -- pareto ----------------------------------------------------------------
 
 def test_pareto_front_simple():
@@ -116,6 +196,63 @@ def test_cache_roundtrip_and_miss(tmp_path):
     assert c.get(key) == {"x": 1.5}
     assert len(c) == 1
     assert c.hits == 1 and c.misses == 1
+
+
+def test_cache_corrupt_entry_is_miss_and_deleted(tmp_path):
+    """A killed worker mid-write (non-atomic fs) leaves a truncated
+    entry: get() must treat it as a miss and delete it, never raise."""
+    c = ResultCache(str(tmp_path / "cache"))
+    key = content_key({"a": 1})
+    c.put(key, {"x": 1})
+    p = c._path(key)
+    with open(p, "w") as f:
+        f.write('{"x": 1, "trunca')              # torn mid-write
+    assert c.get(key) is None
+    assert not os.path.exists(p)                 # dropped, will re-simulate
+    c.put(key, {"x": 2})
+    with open(p, "w") as f:
+        f.write('[1, 2, 3]')                     # valid JSON, not a record
+    assert c.get(key) is None
+    assert not os.path.exists(p)
+    c.put(key, {"x": 3})
+    assert c.get(key) == {"x": 3}                # cache still functional
+
+
+def test_cache_stats_prune_and_lifetime(tmp_path):
+    from repro.sweep.cache import SCHEMA_VERSION
+
+    root = str(tmp_path / "cache")
+    c = ResultCache(root)
+    k1, k2, k3 = (content_key({"a": i}) for i in range(3))
+    c.put(k1, {"x": 1})
+    c.put(k2, {"x": 2})
+    with open(c.put(k3, {"x": 3}), "w") as f:
+        json.dump({"x": 3}, f)                   # forge a legacy entry
+    st = c.stats()
+    assert st["entries"] == 3 and st["bytes"] > 0
+    assert st["by_schema"][SCHEMA_VERSION] == 2
+    assert st["by_schema"][None] == 1
+    assert c.prune() == 1                        # drops the legacy entry
+    assert len(c) == 2 and c.get(k1) == {"x": 1}
+
+    c.get(content_key({"never": 1}))             # one miss
+    c.log_stats("t")
+    life = ResultCache(root).lifetime_stats()
+    assert life["runs"] == 1 and life["misses"] == 1
+    assert life["hits"] == 1                     # the get(k1) above
+    assert life["hit_rate"] == 0.5
+
+
+def test_cache_cli_stats_and_prune(tmp_path, capsys):
+    from repro.sweep.__main__ import main as sweep_main
+
+    root = str(tmp_path / "cache")
+    c = ResultCache(root)
+    c.put(content_key({"a": 1}), {"x": 1})
+    assert sweep_main(["cache", root, "--prune"]) == 0
+    out = capsys.readouterr().out
+    assert "entries,1" in out and "schema_current,1" in out
+    assert "pruned,0" in out                     # nothing stale yet
 
 
 # -- runner end-to-end -----------------------------------------------------
@@ -163,12 +300,31 @@ def test_campaign_monotone_in_clock(tmp_path):
     assert all(a > b for a, b in zip(times, times[1:]))
 
 
+def test_best_tie_break_by_grid_index():
+    """Equal-metric points resolve by grid index, not iteration
+    accident, so reports are stable across runs/backends."""
+    from repro.sweep.runner import CampaignResult
+
+    recs = [
+        {"grid_index": 2, "refined": True, "time_ns": 5.0, "pid": "late"},
+        {"grid_index": 0, "refined": True, "time_ns": 5.0, "pid": "early"},
+        {"grid_index": 1, "refined": True, "time_ns": 9.0, "pid": "slow"},
+    ]
+    res = CampaignResult(spec={}, records=recs, summary={})
+    assert res.best("time_ns")["pid"] == "early"
+    # reversed record order: same winner
+    res2 = CampaignResult(spec={}, records=recs[::-1], summary={})
+    assert res2.best("time_ns")["pid"] == "early"
+    assert CampaignResult(spec={}, records=[], summary={}).best() is None
+
+
 def test_campaign_refine_all_and_result_io(tmp_path):
     spec = _small_spec(axes={"clock_ghz": [0.5, 1.0]},
                        refine=RefineSpec(mode="all"))
     res = run_campaign(spec, workers=0, use_cache=False)
     assert len(res.refined) == 2
     assert res.best("time_ns")["overrides"]["clock_ghz"] == 1.0
+    assert [r["grid_index"] for r in res.records] == [0, 1]
     p = str(tmp_path / "campaign.json")
     save_result(res, p)
     res2 = load_result(p)
