@@ -1,0 +1,97 @@
+"""Prefill-vs-decode roofline comparison (consumed by the report).
+
+For each (arch, context length L, batch) cell, compile the prefill
+(``seq=L``) and decode (``kv_len=L``) op lists of one transformer layer
+and place both phases on the chip roofline:
+
+  intensity     = compiled FLOPs / compiled HBM bytes   [flops/byte]
+  compute_ns    = FLOPs / peak bf16 FLOP/s
+  memory_ns     = HBM bytes / HBM BW
+  bound         = whichever term dominates; the ridge point
+                  (peak_flops / hbm_bw) separates the regimes
+
+Decode op lists stream the KV cache from HBM (``Op.stream``), so their
+intensity collapses from O(seq) to O(batch): the same layer that sits
+far right of the ridge in prefill lands deep in the memory-bound region
+in decode — the phase-flip that drives latency/energy conclusions in
+serving studies. The artifact (``phase_roofline.json``) is rendered by
+``benchmarks.report``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import get_config
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import lm_layer_ops
+from repro.hw.presets import resolve_preset
+
+from .common import csv_row, save_json
+
+PRESET = "v5e"
+ARCHS = ("qwen3-32b", "qwen3-moe-30b-a3b")
+CTX = (512, 2048, 8192)
+BATCH = (1, 8)
+N_TILES = 2
+
+
+def _cell(cfg, hw, *, phase: str, ctx: int, batch: int) -> Dict:
+    kw = dict(phase=phase, batch=batch, tp_shards=1)
+    if phase == "decode":
+        kw["kv_len"] = ctx
+    else:
+        kw["seq"] = ctx
+    ops = lm_layer_ops(cfg, **kw)
+    cw = compile_ops(ops, hw, CompileOptions(n_tiles=N_TILES, dtype_bytes=1))
+    peak = hw.peak_tflops * 1e12
+    compute_ns = cw.total_flops / peak * 1e9
+    memory_ns = cw.hbm_bytes / hw.hbm_bytes_per_ns
+    intensity = cw.total_flops / cw.hbm_bytes if cw.hbm_bytes else 0.0
+    return {
+        "arch": cfg.name, "phase": phase, "ctx": ctx, "batch": batch,
+        "flops": cw.total_flops, "hbm_bytes": cw.hbm_bytes,
+        "flops_per_byte": intensity,
+        "compute_ns": compute_ns, "memory_ns": memory_ns,
+        "bound": "compute" if compute_ns >= memory_ns else "memory",
+        "spilled_layers": cw.spilled_layers,
+    }
+
+
+def run() -> dict:
+    hw = resolve_preset(PRESET)
+    ridge = hw.peak_tflops * 1e12 / (hw.hbm_bytes_per_ns * 1e9)
+    rows: List[Dict] = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for ctx in CTX:
+            for b in BATCH:
+                for phase in ("prefill", "decode"):
+                    rows.append(_cell(cfg, hw, phase=phase, ctx=ctx,
+                                      batch=b))
+    out = {"preset": PRESET, "ridge_flops_per_byte": ridge, "rows": rows}
+    save_json("phase_roofline.json", out)
+    return out
+
+
+def main(print_csv: bool = True) -> dict:
+    out = run()
+    rows = out["rows"]
+    dec = [r for r in rows if r["phase"] == "decode"]
+    pre = [r for r in rows if r["phase"] == "prefill"]
+    mem_bound_dec = sum(r["bound"] == "memory" for r in dec)
+    if print_csv:
+        print(csv_row("phase_ridge_flops_per_byte",
+                      out["ridge_flops_per_byte"]))
+        print(csv_row("decode_cells_memory_bound",
+                      mem_bound_dec, f"of {len(dec)}"))
+        worst = min(dec, key=lambda r: r["flops_per_byte"])
+        print(csv_row("decode_min_flops_per_byte", worst["flops_per_byte"],
+                      f"{worst['arch']} kv{worst['ctx']} b{worst['batch']}"))
+        best = max(pre, key=lambda r: r["flops_per_byte"])
+        print(csv_row("prefill_max_flops_per_byte", best["flops_per_byte"],
+                      f"{best['arch']} s{best['ctx']} b{best['batch']}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -177,6 +177,43 @@ def paper_validation_section() -> str:
     return "\n".join(lines)
 
 
+def phase_roofline_section() -> str:
+    """Prefill-vs-decode roofline (benchmarks/phase_roofline.py)."""
+    d = _load("phase_roofline.json")
+    if not d:
+        return ""
+    lines = ["## §Prefill vs decode roofline", ""]
+    lines.append(
+        f"One-transformer-layer op lists (`graph.workloads.lm_layer_ops`) "
+        f"compiled for the `{d['preset']}` preset, placed on the chip "
+        f"roofline. The ridge point is "
+        f"**{d['ridge_flops_per_byte']:.0f} flops/byte**: prefill cells "
+        "sit right of it (compute-bound GEMMs, weights amortized over "
+        "`seq x batch` tokens); decode cells — `m=batch` GEMVs plus an "
+        "HBM-streamed KV cache sized by `kv_len` — collapse far left of "
+        "it. This is the phase flip the `lm_decode_kv` campaign sweeps "
+        "at full grid scale.")
+    lines.append("")
+    lines.append("| arch | ctx | batch | phase | flops/byte | compute_ns | "
+                 "memory_ns | bound |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in d["rows"]:
+        lines.append(
+            f"| {r['arch']} | {r['ctx']} | {r['batch']} | {r['phase']} | "
+            f"{r['flops_per_byte']:.1f} | {r['compute_ns']:.3g} | "
+            f"{r['memory_ns']:.3g} | **{r['bound']}** |")
+    lines.append("")
+    dec = [r for r in d["rows"] if r["phase"] == "decode"]
+    mem = sum(r["bound"] == "memory" for r in dec)
+    lines.append(
+        f"{mem}/{len(dec)} decode cells are memory-bound; every decode "
+        "cell's intensity is below its matching prefill cell's. The "
+        "`lm_decode_kv` campaign records carry per-point "
+        "`flops_per_byte` so the same comparison can be made across "
+        "its full grid; `tests/test_phase_workloads.py` asserts it.")
+    return "\n".join(lines)
+
+
 def campaign_section() -> str:
     """Render every archived sweep campaign (repro.sweep records)."""
     paths = sorted(glob.glob(os.path.join(ART_DIR, "campaigns", "*.json")))
@@ -282,6 +319,10 @@ def main():
     cs = campaign_section()
     if cs:
         print(cs)
+        print()
+    pr = phase_roofline_section()
+    if pr:
+        print(pr)
         print()
     print(roofline_section())
     print()

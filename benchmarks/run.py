@@ -19,7 +19,7 @@ import time
 
 from . import (accuracy_characterization, computation_scaling, dvfs_sweep,
                frequency_scaling, lm_replay, membw_scaling, perf_delta,
-               power_profile, roofline, sim_speed)
+               phase_roofline, power_profile, roofline, sim_speed)
 from .common import csv_row
 
 
@@ -86,6 +86,9 @@ def main() -> int:
     if lr["rows"]:
         print(csv_row("replay_bound_respected",
                       float(all(r["bound_respected"] for r in lr["rows"]))))
+
+    print("\n== phase_roofline (prefill vs decode) ==")
+    phase_roofline.main()
 
     print("\n== roofline (dry-run artifacts) ==")
     rf = roofline.main(print_csv=False)

@@ -11,6 +11,29 @@ switch.
 Implementations must be deterministic in *content*: for a given payload
 list every backend produces the same records (the equivalence tests and
 the byte-identical acceptance check rely on it).
+
+Worked example — refining two points by hand (normally ``run_campaign``
+does this for you)::
+
+    >>> from repro.exec.backend import get_backend
+    >>> from repro.sweep.refine import refine_payload
+    >>> from repro.hw.presets import resolve_preset, to_dict
+    >>> hw = to_dict(resolve_preset("v5e"))
+    >>> payloads = [refine_payload(workload=w, n_tiles=2, hw=hw,
+    ...                            compile_opts={}, pti_ns=50_000.0,
+    ...                            temp_c=65.0, keep_series=False)
+    ...             for w in ("lm/qwen3-32b/s512b1tp1",
+    ...                       "lm/qwen3-32b/decode/kv512b1tp1")]
+    >>> bk = get_backend("inline")          # or "pool" / "spool"
+    >>> recs = bk.refine(payloads)          # records in payload order
+    >>> sorted(recs[0]) == sorted(recs[1])  # uniform record shape
+    True
+    >>> recs[1]["time_ns"] > 0              # the decode step, simulated
+    True
+
+Swapping ``"inline"`` for ``get_backend("pool", workers=4)`` or
+``get_backend("spool", spool_dir="...")`` changes *where* the payloads
+run, never the records.
 """
 from __future__ import annotations
 

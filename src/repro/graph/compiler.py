@@ -33,6 +33,9 @@ __all__ = ["CompileOptions", "compile_ops", "CompiledWorkload"]
 
 _bid = itertools.count(1)
 
+# op kind -> hw.ici.CollectiveSpec op name
+_COLLECTIVE_OPS = {"allreduce": "all-reduce", "alltoall": "all-to-all"}
+
 
 @dataclass
 class CompileOptions:
@@ -84,13 +87,15 @@ def compile_ops(ops: Sequence[Op], cfg: HwConfig,
         if prev_barrier is not None:
             waits.append(prev_barrier)
 
-        # tensor-parallel collectives run on the ICI fabric: one
-        # per-device task, no tiling, no weight traffic
-        if op.kind == "allreduce":
+        # collectives run on the ICI fabric: one per-device task, no
+        # tiling, no weight traffic. allreduce = Megatron TP combine;
+        # alltoall = MoE expert-parallel dispatch/combine (ring phases
+        # and per-link bytes come from hw.ici.CollectiveSpec)
+        if op.kind in _COLLECTIVE_OPS:
             done_b = next(_bid)
             tasks.append(Task(
                 engine="ici",
-                payload=CollectiveSpec(op="all-reduce",
+                payload=CollectiveSpec(op=_COLLECTIVE_OPS[op.kind],
                                        payload_bytes=in_bytes,
                                        group_size=op.group,
                                        name=op.name),
@@ -116,9 +121,10 @@ def compile_ops(ops: Sequence[Op], cfg: HwConfig,
             waits.append((wb, 1))
 
         # activation residency: spill to HBM when the tile working set
-        # exceeds the budget
+        # exceeds the budget; ops flagged ``stream`` (KV-cache reads /
+        # appends, which live in HBM across decode steps) always stream
         act_ws = (in_bytes + out_bytes) / nt
-        streams = (act_ws + w_bytes) > budget
+        streams = (act_ws + w_bytes) > budget or op.stream
         if streams:
             spilled += 1
             ab = next(_bid)

@@ -14,6 +14,45 @@ Two families:
 
 Ops are engine-agnostic records; ``graph.compiler`` maps them to tiles,
 inserts DMA tasks + barriers, and applies variant effects.
+
+LM workloads carry an **inference phase**:
+
+* ``phase="prefill"`` (default) — one forward pass over ``seq`` prompt
+  tokens per sequence; compute-bound at realistic sizes (big GEMMs,
+  weights amortized over ``seq * batch`` tokens).
+* ``phase="decode"`` — ONE autoregressive step: ``batch`` new tokens
+  (m=batch GEMVs against the full weight set) attending over a
+  ``kv_len``-token KV cache. The cache lives in HBM, so its read/append
+  traffic is emitted with ``Op.stream=True`` (never VMEM-resident) —
+  this is the memory-bound, latency-dominated regime; flops/byte
+  collapses from O(seq) to O(batch).
+
+Worked example — the decode op-list shape::
+
+    >>> from repro.configs import get_config
+    >>> ops = lm_layer_ops(get_config("qwen3-32b"), batch=8,
+    ...                    phase="decode", kv_len=4096, tp_shards=2)
+    >>> [(o.name, o.kind) for o in ops][:6]
+    [('qkv', 'matmul'), ('kv_append', 'eltwise'), ('scores', 'matmul'),
+     ('softmax', 'softmax'), ('pv', 'matmul'), ('attn_out', 'matmul')]
+    >>> next(o for o in ops if o.name == "qkv").m     # m = batch GEMVs
+    8
+    >>> next(o for o in ops if o.name == "scores").n  # contracts the cache
+    4096
+
+MoE archs additionally take ``ep_shards`` (expert parallelism): with
+``ep_shards > 1`` the experts are sharded over an EP group and the op
+list carries ``alltoall`` dispatch/combine collectives — the op-list
+mirror of ``models/moe.py``'s ``moe_ep`` shard_map path (capacity-
+bucketed tokens exchanged with ``jax.lax.all_to_all``).
+
+Parameterized workload names (``resolve_workload``) encode all of this:
+
+    lm/<arch>/s<seq>b<batch>tp<tp>[ep<ep>]          prefill
+    lm/<arch>/decode/kv<kv_len>b<batch>tp<tp>[ep<ep>]  decode
+
+e.g. ``lm/qwen3-32b/decode/kv4096b8tp2`` or
+``lm/qwen3-moe-30b-a3b/s1024b4tp1ep16``.
 """
 from __future__ import annotations
 
@@ -34,7 +73,7 @@ __all__ = ["Op", "mobilenet_v2", "resnet50", "tiny_yolo_v2", "WORKLOADS",
 class Op:
     name: str
     kind: str              # conv | dwconv | matmul | pool | eltwise | act |
-    #                        softmax | global_pool | allreduce
+    #                        softmax | global_pool | allreduce | alltoall
     # GEMM view (conv is im2col'd): out[M,N] = in[M,K] @ w[K,N]
     m: int = 0
     n: int = 0
@@ -47,7 +86,10 @@ class Op:
     out_bytes: float = 0.0
     w_bytes: float = 0.0
     sparsity: float = 0.0  # fraction of MACs skippable by sparsity HW
-    group: int = 1         # collective group size (allreduce ops)
+    group: int = 1         # collective group size (allreduce/alltoall ops)
+    stream: bool = False   # force HBM streaming even when the working set
+    #                        fits VMEM (KV-cache reads/appends: the cache
+    #                        lives in HBM across decode steps)
 
     @property
     def flops(self) -> float:
@@ -173,40 +215,105 @@ WORKLOADS = {
 }
 
 
-def lm_layer_ops(cfg: ArchConfig, *, seq: int, batch: int,
-                 dtype_bytes: int = 2, tp_shards: int = 1) -> List[Op]:
+def lm_layer_ops(cfg: ArchConfig, *, seq: int = 0, batch: int,
+                 dtype_bytes: int = 2, tp_shards: int = 1,
+                 phase: str = "prefill", kv_len: int = 0,
+                 ep_shards: int = 1) -> List[Op]:
     """Per-device op list for ONE transformer layer (forward): qkv/attn/out
-    + FFN or MoE. TP sharding divides head and ff dims."""
+    + FFN or MoE. TP sharding divides head and ff dims.
+
+    ``phase="prefill"`` processes ``seq`` tokens per sequence (one
+    forward pass over the prompt; ``kv_len`` must stay 0). ``phase=
+    "decode"`` emits ONE autoregressive step: ``T = batch`` new tokens
+    (m=batch GEMVs), a per-layer KV-cache append, and score/pv GEMMs
+    contracting over the ``kv_len``-token cache whose HBM read traffic
+    (``batch * n_kv_heads/tp * kv_len * hd`` bytes per side, GQA-aware)
+    is forced to stream (``Op.stream``).
+
+    MoE archs: ``ep_shards > 1`` shards experts over an EP group and
+    adds ``alltoall`` dispatch/combine collectives (tokens bucketed per
+    peer at ``capacity_factor``, as in ``models.moe.moe_ep``); with
+    ``ep_shards == 1`` experts stay tensor-sharded over TP and the
+    combine is the Megatron ``mlp_allreduce``.
+    """
+    if phase not in ("prefill", "decode"):
+        raise ValueError(f"phase must be prefill|decode, got {phase!r}")
+    if phase == "decode":
+        if kv_len < 1:
+            raise ValueError("decode phase needs kv_len >= 1")
+        if seq not in (0, 1):
+            raise ValueError("decode phase processes one token per "
+                             "sequence; leave seq unset")
+    else:
+        if seq < 1:
+            raise ValueError("prefill phase needs seq >= 1")
+        if kv_len:
+            raise ValueError("kv_len only applies to phase='decode'")
+    if ep_shards > 1 and not cfg.is_moe:
+        raise ValueError(f"ep_shards > 1 needs a MoE arch, "
+                         f"got {cfg.name} ({cfg.family})")
     d = cfg.d_model
     H = max(cfg.n_heads // tp_shards, 1)
     KV = max(cfg.n_kv_heads // max(tp_shards, 1), 1)
     hd = cfg.hd
-    T = seq * batch
+    decode = phase == "decode"
+    # tokens processed this step (per device): the whole prompt in
+    # prefill, one new token per sequence in decode
+    T = batch if decode else seq * batch
+    ctx = kv_len if decode else seq     # attention context length
+    # bytes of K (or V) cache read per step: GQA reads kv heads only
+    kv_side = batch * KV * ctx * hd * dtype_bytes
     ops = [
         Op("qkv", "matmul", m=T, n=(H + 2 * KV) * hd, k=d,
            in_bytes=T * d * dtype_bytes,
            out_bytes=T * (H + 2 * KV) * hd * dtype_bytes,
            w_bytes=d * (H + 2 * KV) * hd * dtype_bytes),
-        Op("scores", "matmul", m=T * H, n=seq, k=hd,
-           in_bytes=2 * T * H * hd * dtype_bytes,
-           out_bytes=T * H * seq * 4),
-        Op("softmax", "softmax", elems=T * H * seq, vec_kind="softmax",
-           in_bytes=T * H * seq * 4, out_bytes=T * H * seq * dtype_bytes),
-        Op("pv", "matmul", m=T * H, n=hd, k=seq,
-           in_bytes=T * H * seq * dtype_bytes,
-           out_bytes=T * H * hd * dtype_bytes),
+    ]
+    if decode:
+        # append this step's K,V rows to the HBM-resident cache
+        ops.append(Op("kv_append", "eltwise", elems=2 * T * KV * hd,
+                      vec_kind="copy",
+                      in_bytes=2 * T * KV * hd * dtype_bytes,
+                      out_bytes=2 * T * KV * hd * dtype_bytes, stream=True))
+    ops += [
+        Op("scores", "matmul", m=T * H, n=ctx, k=hd,
+           in_bytes=(T * H * hd * dtype_bytes + kv_side) if decode
+           else 2 * T * H * hd * dtype_bytes,
+           out_bytes=T * H * ctx * 4, stream=decode),
+        Op("softmax", "softmax", elems=T * H * ctx, vec_kind="softmax",
+           in_bytes=T * H * ctx * 4, out_bytes=T * H * ctx * dtype_bytes),
+        Op("pv", "matmul", m=T * H, n=hd, k=ctx,
+           in_bytes=T * H * ctx * dtype_bytes + (kv_side if decode else 0),
+           out_bytes=T * H * hd * dtype_bytes, stream=decode),
         Op("attn_out", "matmul", m=T, n=d, k=H * hd,
            in_bytes=T * H * hd * dtype_bytes, out_bytes=T * d * dtype_bytes,
            w_bytes=H * hd * d * dtype_bytes),
     ]
     if cfg.is_moe:
-        E_local = max(cfg.n_experts // tp_shards, 1)
-        cap = int(T * cfg.experts_per_token / cfg.n_experts * 1.25) + 1
+        k_top, E = cfg.experts_per_token, cfg.n_experts
+        cf = cfg.capacity_factor
         f = cfg.d_ff
+        ep = max(ep_shards, 1)
+        # ep==1: experts tensor-sharded over TP (Megatron expert-TP,
+        # tokens replicated). ep>1: experts owned by EP peers; every
+        # peer contributes T local tokens, so per-expert capacity sees
+        # the whole group's assignments (ep * T * k / E).
+        E_local = max(E // (ep if ep > 1 else tp_shards), 1)
+        cap = int(max(ep, 1) * T * k_top / E * cf) + 1 if ep > 1 \
+            else int(T * k_top / E * cf) + 1
+        # capacity-bucketed token exchange to the expert owners (mirrors
+        # models.moe.moe_ep: send buffer [ep, cap, d]); dispatch and
+        # combine move the same bytes
+        a2a_bytes = int(T * k_top * cf + 1) * d * dtype_bytes
+        ops.append(
+            Op("router", "matmul", m=T, n=E, k=d,
+               in_bytes=T * d * dtype_bytes, out_bytes=T * E * 4,
+               w_bytes=d * E * dtype_bytes))
+        if ep > 1:
+            ops.append(Op("moe_dispatch", "alltoall",
+                          in_bytes=a2a_bytes, out_bytes=a2a_bytes,
+                          group=ep))
         ops += [
-            Op("router", "matmul", m=T, n=cfg.n_experts, k=d,
-               in_bytes=T * d * dtype_bytes, out_bytes=T * cfg.n_experts * 4,
-               w_bytes=d * cfg.n_experts * dtype_bytes),
             Op("experts_up", "matmul", m=E_local * cap, n=2 * f, k=d,
                in_bytes=E_local * cap * d * dtype_bytes,
                out_bytes=E_local * cap * 2 * f * dtype_bytes,
@@ -216,6 +323,10 @@ def lm_layer_ops(cfg: ArchConfig, *, seq: int, batch: int,
                out_bytes=E_local * cap * d * dtype_bytes,
                w_bytes=E_local * f * d * dtype_bytes),
         ]
+        if ep > 1:
+            ops.append(Op("moe_combine", "alltoall",
+                          in_bytes=a2a_bytes, out_bytes=a2a_bytes,
+                          group=ep))
     elif cfg.d_ff:
         f = cfg.d_ff // max(tp_shards, 1)
         ops += [
@@ -231,14 +342,17 @@ def lm_layer_ops(cfg: ArchConfig, *, seq: int, batch: int,
         ]
     if tp_shards > 1:
         # Megatron-style TP: one all-reduce after the attention output
-        # projection and one after the MLP/MoE down projection
+        # projection and one after the MLP/MoE down projection (the MoE
+        # combine is the EP alltoall instead when ep_shards > 1)
         ar_bytes = T * d * dtype_bytes
-        ops.insert(5, Op("attn_allreduce", "allreduce",
-                         in_bytes=ar_bytes, out_bytes=ar_bytes,
-                         group=tp_shards))
-        ops.append(Op("mlp_allreduce", "allreduce",
-                      in_bytes=ar_bytes, out_bytes=ar_bytes,
-                      group=tp_shards))
+        i_attn = next(i for i, o in enumerate(ops) if o.name == "attn_out")
+        ops.insert(i_attn + 1, Op("attn_allreduce", "allreduce",
+                                  in_bytes=ar_bytes, out_bytes=ar_bytes,
+                                  group=tp_shards))
+        if not (cfg.is_moe and ep_shards > 1):
+            ops.append(Op("mlp_allreduce", "allreduce",
+                          in_bytes=ar_bytes, out_bytes=ar_bytes,
+                          group=tp_shards))
     ops.append(Op("norms", "eltwise", elems=2 * T * d, vec_kind="rsqrt",
                   in_bytes=T * d * dtype_bytes, out_bytes=T * d * dtype_bytes))
     return ops
@@ -246,27 +360,45 @@ def lm_layer_ops(cfg: ArchConfig, *, seq: int, batch: int,
 
 # -- parameterized LM workload names ---------------------------------------
 #
-# ``lm/<arch>/s<seq>b<batch>tp<tp>`` names one ``lm_layer_ops`` instance
-# (per-device op list of one transformer layer of ``<arch>`` at sequence
-# length / batch / tensor-parallel degree). ``resolve_workload`` accepts
-# these anywhere a plain ``WORKLOADS`` name is accepted, which is what
-# lets sweep campaigns grid LM workloads over seq x batch x TP.
+# ``lm/<arch>/s<seq>b<batch>tp<tp>[ep<ep>]`` names one prefill
+# ``lm_layer_ops`` instance; ``lm/<arch>/decode/kv<kv>b<batch>tp<tp>[ep<ep>]``
+# names one decode step (one token per sequence against a <kv>-token KV
+# cache). ``resolve_workload`` accepts these anywhere a plain
+# ``WORKLOADS`` name is accepted, which is what lets sweep campaigns
+# grid LM workloads over phase x seq/kv_len x batch x TP x EP.
 
 _LM_NAME_RE = re.compile(
-    r"^lm/(?P<arch>[A-Za-z0-9_.\-]+)/s(?P<seq>\d+)b(?P<batch>\d+)"
-    r"tp(?P<tp>\d+)$")
+    r"^lm/(?P<arch>[A-Za-z0-9_.\-]+)/"
+    r"(?:decode/kv(?P<kv>\d+)|s(?P<seq>\d+))"
+    r"b(?P<batch>\d+)tp(?P<tp>\d+)(?:ep(?P<ep>\d+))?$")
 
 
-def lm_workload_name(arch: str, *, seq: int, batch: int, tp: int) -> str:
-    return f"lm/{arch}/s{seq}b{batch}tp{tp}"
+def lm_workload_name(arch: str, *, seq: int = 0, batch: int, tp: int,
+                     phase: str = "prefill", kv_len: int = 0,
+                     ep: int = 1) -> str:
+    if phase == "decode":
+        head = f"decode/kv{kv_len}"
+    else:
+        head = f"s{seq}"
+    return f"lm/{arch}/{head}b{batch}tp{tp}" + (f"ep{ep}" if ep > 1 else "")
 
 
 def lm_grid_names(arch: str, seq: List[int], batch: List[int],
-                  tp: List[int]) -> List[str]:
-    """Expand a seq x batch x TP grid into workload names (grid order:
-    seq-major, then batch, then tp)."""
-    return [lm_workload_name(arch, seq=s, batch=b, tp=t)
-            for s in seq for b in batch for t in tp]
+                  tp: List[int], *, phase: List[str] = ("prefill",),
+                  kv_len: List[int] = (0,),
+                  ep: List[int] = (1,)) -> List[str]:
+    """Expand a phase x (seq | kv_len) x batch x TP x EP grid into
+    workload names. Grid order: phase-major, then seq (prefill) or
+    kv_len (decode), then batch, tp, ep — so the default arguments
+    reproduce the historical seq-major prefill ordering."""
+    out: List[str] = []
+    for ph in phase:
+        lens = kv_len if ph == "decode" else seq
+        out += [lm_workload_name(arch, seq=0 if ph == "decode" else s,
+                                 batch=b, tp=t, phase=ph,
+                                 kv_len=s if ph == "decode" else 0, ep=e)
+                for s in lens for b in batch for t in tp for e in ep]
+    return out
 
 
 def resolve_workload(name: str) -> Callable[[], List[Op]]:
@@ -278,15 +410,25 @@ def resolve_workload(name: str) -> Callable[[], List[Op]]:
     if not m:
         raise KeyError(
             f"unknown workload {name!r}; have {sorted(WORKLOADS)} or "
-            f"'lm/<arch>/s<seq>b<batch>tp<tp>'")
+            f"'lm/<arch>/s<seq>b<batch>tp<tp>[ep<ep>]' or "
+            f"'lm/<arch>/decode/kv<kv>b<batch>tp<tp>[ep<ep>]'")
     from ..configs import get_config   # deferred: avoids import cycle
     cfg = get_config(m["arch"])        # raises KeyError on bad arch
-    seq, batch, tp = int(m["seq"]), int(m["batch"]), int(m["tp"])
-    if seq < 1 or batch < 1 or tp < 1:
+    decode = m["kv"] is not None
+    seq = int(m["seq"]) if m["seq"] else 0
+    kv = int(m["kv"]) if m["kv"] else 0
+    batch, tp = int(m["batch"]), int(m["tp"])
+    ep = int(m["ep"]) if m["ep"] else 1
+    if batch < 1 or tp < 1 or ep < 1 or (kv < 1 if decode else seq < 1):
         raise KeyError(f"bad LM workload parameters in {name!r}")
+    if ep > 1 and not cfg.is_moe:
+        raise KeyError(f"ep>1 in {name!r} needs a MoE arch; "
+                       f"{cfg.name} is {cfg.family}")
 
     def build() -> List[Op]:
-        return lm_layer_ops(cfg, seq=seq, batch=batch, tp_shards=tp)
+        return lm_layer_ops(cfg, seq=seq, batch=batch, tp_shards=tp,
+                            phase="decode" if decode else "prefill",
+                            kv_len=kv, ep_shards=ep)
 
     return build
 

@@ -87,13 +87,16 @@ def cmd_run(args: argparse.Namespace) -> int:
 
 
 def cmd_list(_args: argparse.Namespace) -> int:
+    """List builtin specs with workload count, grid size, and the spec's
+    one-line ``description`` field — how new campaigns are discovered."""
     names = builtin_spec_names()
     if not names:
         print("no builtin specs found")
         return 1
     for n in names:
         spec = load_builtin_spec(n)
-        print(f"{n:>20s}  {spec.grid_size:5d} points  "
+        print(f"{n:>20s}  {len(spec.workloads):3d} workloads  "
+              f"{spec.grid_size:6d} points  {len(spec.cells()):4d} cells  "
               f"refine={spec.refine.mode:<7s} {spec.description}")
     return 0
 

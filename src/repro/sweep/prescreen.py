@@ -36,6 +36,7 @@ class CellPrescreen:
     n_tasks: int
     spilled_layers: int
     total_flops: float
+    hbm_bytes: float             # compiled HBM traffic (weights + spills)
     wall_s: float                # compile + batched schedule wall time
 
 
@@ -86,4 +87,5 @@ def prescreen_cell(cell: SweepCell) -> CellPrescreen:
                          energy_j=energy, util=util, n_tasks=len(cw.tasks),
                          spilled_layers=cw.spilled_layers,
                          total_flops=cw.total_flops,
+                         hbm_bytes=cw.hbm_bytes,
                          wall_s=time.time() - t0)

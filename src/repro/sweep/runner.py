@@ -181,6 +181,13 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
                 if scr.time_ns[i] > 0 else 0.0,
                 "analytic_avg_w": float(scr.avg_w[i]),
                 "analytic_energy_j": float(scr.energy_j[i]),
+                # cell-level compiled-workload intensity: weights+spill
+                # HBM traffic vs total flops — decode points sit far
+                # below prefill points (memory-bound regime)
+                "total_flops": scr.total_flops,
+                "hbm_bytes": scr.hbm_bytes,
+                "flops_per_byte": (scr.total_flops / scr.hbm_bytes
+                                   if scr.hbm_bytes > 0 else 0.0),
                 "selected": i in picked,
                 "refined": False,
                 "cached": False,

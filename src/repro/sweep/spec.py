@@ -11,6 +11,35 @@ refine. Axes split into two kinds:
   channel count, ...) change task-graph compilation or system topology,
   so each distinct combination forms its own cell (one compile + one
   batched pre-screen per cell).
+
+Worked example — an LM campaign over inference phase and KV length::
+
+    >>> from repro.sweep import SweepSpec, RefineSpec, run_campaign
+    >>> spec = SweepSpec(
+    ...     name="demo",
+    ...     lm_grid={"arch": "qwen3-32b",
+    ...              "phase": ["prefill", "decode"],
+    ...              "seq": [512], "kv_len": [512, 2048],
+    ...              "batch": [1, 8], "tp": [1, 2]},
+    ...     preset="v5e",
+    ...     axes={"clock_ghz": [0.6, 0.94], "hbm_gbps": [819.0, 1640.0]},
+    ...     refine=RefineSpec(mode="pareto", max_points=2))
+    >>> spec.workloads[:2]
+    ['lm/qwen3-32b/s512b1tp1', 'lm/qwen3-32b/s512b1tp2']
+    >>> spec.workloads[-1]
+    'lm/qwen3-32b/decode/kv2048b8tp2'
+    >>> spec.grid_size               # 12 workloads x 4 analytic points
+    48
+    >>> result = run_campaign(spec, workers=0)   # doctest: +SKIP
+
+``lm_grid`` keys: ``arch`` (registry id), ``phase`` (subset of
+``["prefill", "decode"]``, default prefill), ``seq`` (prefill prompt
+lengths), ``kv_len`` (decode KV-cache lengths), ``batch``, ``tp``
+(tensor-parallel degrees) and ``ep`` (MoE expert-parallel degrees —
+``ep > 1`` adds alltoall dispatch/combine collectives and needs a MoE
+arch). Every expanded workload is its own structural cell. Scalars are
+accepted wherever a list is expected. Full field reference:
+``docs/CAMPAIGNS.md``.
 """
 from __future__ import annotations
 
@@ -77,9 +106,11 @@ class SweepSpec:
     refine: RefineSpec = field(default_factory=RefineSpec)
     cache_dir: Optional[str] = None
     description: str = ""
-    # LM workload grid: {"arch": ..., "seq": [...], "batch": [...],
-    # "tp": [...]} — expands into ``lm/<arch>/s<S>b<B>tp<T>`` workloads
-    # (each combination is its own structural cell)
+    # LM workload grid: {"arch": ..., "phase": ["prefill"|"decode"],
+    # "seq": [...], "kv_len": [...], "batch": [...], "tp": [...],
+    # "ep": [...]} — expands into ``lm/<arch>/s<S>b<B>tp<T>[ep<E>]``
+    # (prefill) / ``lm/<arch>/decode/kv<K>b<B>tp<T>[ep<E>]`` (decode)
+    # workloads (each combination is its own structural cell)
     lm_grid: Optional[Dict[str, Any]] = None
 
     def __post_init__(self):
@@ -88,14 +119,42 @@ class SweepSpec:
         if isinstance(self.n_tiles, int):
             self.n_tiles = [self.n_tiles]
         if self.lm_grid:
-            g = {k: [v] if isinstance(v, int) else v
+            g = {k: [v] if isinstance(v, (int, str)) else list(v)
                  for k, v in self.lm_grid.items()}   # scalar convenience
-            try:
-                names = lm_grid_names(g.pop("arch"), g.pop("seq"),
-                                      g.pop("batch"), g.pop("tp"))
-            except KeyError as e:
-                raise KeyError(f"lm_grid needs arch/seq/batch/tp, "
-                               f"missing {e.args[0]!r}") from None
+            archs = g.pop("arch", [None])
+            if len(archs) != 1:
+                raise ValueError(f"lm_grid takes exactly one arch, "
+                                 f"got {archs}")
+            arch = archs[0]
+            phase = g.pop("phase", ["prefill"])
+            bad_ph = [p for p in phase if p not in ("prefill", "decode")]
+            if bad_ph:
+                raise ValueError(f"lm_grid phase must be prefill|decode, "
+                                 f"got {bad_ph}")
+            seq = g.pop("seq", [])
+            kv_len = g.pop("kv_len", [])
+            ep = g.pop("ep", [1])
+            missing = [k for k, need in
+                       [("arch", arch is None), ("batch", "batch" not in g),
+                        ("tp", "tp" not in g),
+                        ("seq", "prefill" in phase and not seq),
+                        ("kv_len", "decode" in phase and not kv_len)]
+                       if need]
+            if missing:
+                raise KeyError(
+                    f"lm_grid needs arch/batch/tp, plus seq for prefill "
+                    f"and kv_len for decode; missing {missing}")
+            # an axis whose phase is absent would silently vanish from
+            # the grid — reject it like an unknown key
+            stray = [k for k, vals, ph in
+                     [("seq", seq, "prefill"), ("kv_len", kv_len, "decode")]
+                     if vals and ph not in phase]
+            if stray:
+                raise KeyError(
+                    f"lm_grid axis {stray} given but its phase is not in "
+                    f"phase={phase}")
+            names = lm_grid_names(arch, seq, g.pop("batch"), g.pop("tp"),
+                                  phase=phase, kv_len=kv_len, ep=ep)
             if g:
                 raise KeyError(f"unknown lm_grid keys {sorted(g)}")
             # idempotent: to_dict/from_dict round-trips re-expand the

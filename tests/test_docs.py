@@ -1,0 +1,30 @@
+"""Docs integrity: the CI docs-check must pass from a clean tree (no
+broken intra-repo links, every src/repro package covered by the
+architecture tour)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_check_docs_passes():
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_docs.py")],
+        capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, r.stderr
+    assert "docs check OK" in r.stdout
+
+
+def test_architecture_and_campaigns_docs_exist():
+    for name in ("ARCHITECTURE.md", "CAMPAIGNS.md"):
+        p = os.path.join(REPO, "docs", name)
+        assert os.path.exists(p)
+        text = open(p, encoding="utf-8").read()
+        assert len(text) > 2000
+    camp = open(os.path.join(REPO, "docs", "CAMPAIGNS.md"),
+                encoding="utf-8").read()
+    # the acceptance: both new campaigns + grid fields are documented
+    for needle in ("lm_decode_kv", "moe_ep_grid", "`phase`", "`kv_len`",
+                   "`ep`", "resume", "spool"):
+        assert needle in camp, needle

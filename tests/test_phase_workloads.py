@@ -1,0 +1,208 @@
+"""Decode-phase KV-cache op lists, MoE expert-parallel alltoall
+compilation, and the prefill/decode flops-bytes crossover on the
+analytic model (ISSUE 3 tentpole coverage)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import (lm_grid_names, lm_layer_ops,
+                                   lm_workload_name, resolve_workload,
+                                   workload_bytes, workload_flops)
+from repro.hw.ici import CollectiveSpec
+from repro.hw.presets import resolve_preset
+
+DENSE = get_config("qwen3-32b")
+MOE = get_config("qwen3-moe-30b-a3b")
+
+
+# -- decode op lists -------------------------------------------------------
+
+def test_decode_kv_bytes_grow_linearly_in_kv_len():
+    """KV-cache read/append traffic is linear in kv_len: equal kv_len
+    increments add equal byte increments (and flops stay attention-only
+    linear too)."""
+    sizes = [1024, 2048, 3072, 4096]
+    totals = [workload_bytes(lm_layer_ops(DENSE, batch=4, phase="decode",
+                                          kv_len=kv)) for kv in sizes]
+    deltas = np.diff(totals)
+    assert np.all(deltas > 0)
+    assert np.allclose(deltas, deltas[0])
+    # the per-step KV read is GQA-aware: kv heads only, both K and V
+    ops = lm_layer_ops(DENSE, batch=4, phase="decode", kv_len=2048)
+    kv_side = 4 * DENSE.n_kv_heads * 2048 * DENSE.hd * 2
+    scores = next(o for o in ops if o.name == "scores")
+    assert scores.in_bytes == 4 * DENSE.n_heads * DENSE.hd * 2 + kv_side
+    assert scores.stream and next(o for o in ops if o.name == "pv").stream
+
+
+def test_decode_gemv_shapes_under_tp_and_gqa():
+    """Decode GEMMs are m=batch GEMVs; TP divides q heads and GQA kv
+    heads; score/pv contract over kv_len."""
+    for tp in (1, 2, 4):
+        ops = lm_layer_ops(DENSE, batch=8, phase="decode", kv_len=4096,
+                           tp_shards=tp)
+        by = {o.name: o for o in ops}
+        H = DENSE.n_heads // tp
+        KV = DENSE.n_kv_heads // tp
+        assert by["qkv"].m == 8                      # one token/sequence
+        assert by["qkv"].n == (H + 2 * KV) * DENSE.hd
+        assert by["scores"].m == 8 * H
+        assert by["scores"].n == 4096 and by["scores"].k == DENSE.hd
+        assert by["pv"].k == 4096 and by["pv"].n == DENSE.hd
+        assert by["kv_append"].elems == 2 * 8 * KV * DENSE.hd
+        assert ("attn_allreduce" in by) == (tp > 1)
+
+
+def test_phase_validation_errors():
+    with pytest.raises(ValueError):
+        lm_layer_ops(DENSE, batch=1, phase="decode")          # no kv_len
+    with pytest.raises(ValueError):
+        lm_layer_ops(DENSE, batch=1, phase="prefill")         # no seq
+    with pytest.raises(ValueError):
+        lm_layer_ops(DENSE, seq=64, batch=1, kv_len=64)       # kv in prefill
+    with pytest.raises(ValueError):
+        lm_layer_ops(DENSE, seq=64, batch=1, phase="bogus")
+    with pytest.raises(ValueError):
+        lm_layer_ops(DENSE, seq=64, batch=1, ep_shards=4)     # dense EP
+
+
+def test_decode_workload_names_resolve():
+    name = lm_workload_name("qwen3-32b", phase="decode", kv_len=4096,
+                            batch=8, tp=2)
+    assert name == "lm/qwen3-32b/decode/kv4096b8tp2"
+    ops = resolve_workload(name)()
+    assert any(o.name == "kv_append" for o in ops)
+    # prefill names keep their historical spelling
+    assert lm_workload_name("qwen3-32b", seq=64, batch=1, tp=1) == \
+        "lm/qwen3-32b/s64b1tp1"
+    with pytest.raises(KeyError):
+        resolve_workload("lm/qwen3-32b/decode/kv0b1tp1")      # kv < 1
+    with pytest.raises(KeyError):
+        resolve_workload("lm/qwen3-32b/s64b1tp1ep4")          # dense EP
+    with pytest.raises(KeyError):
+        resolve_workload("lm/qwen3-32b/decode/s64b1tp1")      # bad grammar
+
+
+# -- alltoall compilation --------------------------------------------------
+
+@pytest.mark.parametrize("ep", [1, 2, 8, 16])
+def test_moe_ep_alltoall_compilation(ep):
+    """EP>1 compiles exactly two alltoall collectives per MoE layer
+    (dispatch + combine) onto the ICI engine, each a single-task layer
+    with one signal barrier; their ring phase count follows the EP
+    degree."""
+    ops = lm_layer_ops(MOE, seq=128, batch=2, ep_shards=ep)
+    cfg = resolve_preset("v5e")
+    cw = compile_ops(ops, cfg, CompileOptions(n_tiles=2))
+    coll = [t for t in cw.tasks if t.engine == "ici"]
+    if ep == 1:
+        assert coll == []
+        return
+    assert [t.payload.op for t in coll] == ["all-to-all", "all-to-all"]
+    for t in coll:
+        assert isinstance(t.payload, CollectiveSpec)
+        assert t.payload.group_size == ep
+        assert t.payload.phases() == ep - 1          # ring schedule
+        assert len(t.signals) == 1                   # own barrier...
+        assert len(t.waits) == 1                     # ...chained to prev
+        assert t.payload.payload_bytes > 0
+    # dispatch precedes the expert GEMMs, combine follows them
+    names = [t.name for t in cw.tasks]
+    assert names.index("moe_dispatch") < names.index("experts_up@t0")
+    assert names.index("moe_combine") > names.index("experts_down@t0")
+
+
+def test_moe_ep_with_tp_mixes_collectives():
+    """EP + TP: attention keeps its Megatron allreduce, the MoE combine
+    becomes the EP alltoall (no mlp_allreduce)."""
+    ops = lm_layer_ops(MOE, seq=128, batch=2, tp_shards=2, ep_shards=8)
+    kinds = [o.kind for o in ops if o.kind in ("allreduce", "alltoall")]
+    assert kinds == ["alltoall", "allreduce", "alltoall"] or \
+        kinds == ["allreduce", "alltoall", "alltoall"]
+    names = [o.name for o in ops]
+    assert "mlp_allreduce" not in names
+    assert "attn_allreduce" in names
+    # ep==1 keeps the historical expert-TP shape: combine is allreduce
+    ops1 = lm_layer_ops(MOE, seq=128, batch=2, tp_shards=2, ep_shards=1)
+    assert "mlp_allreduce" in [o.name for o in ops1]
+    assert not any(o.kind == "alltoall" for o in ops1)
+
+
+def test_moe_ep_shards_expert_weights():
+    """Higher EP degree -> fewer local experts -> less weight traffic,
+    while the alltoall payload tracks the local token load."""
+    w = {}
+    for ep in (1, 8, 16):
+        ops = lm_layer_ops(MOE, seq=256, batch=1, ep_shards=ep)
+        w[ep] = sum(o.w_bytes for o in ops if o.name.startswith("experts"))
+    assert w[8] < w[1] and w[16] < w[8]
+    assert w[1] / w[16] == pytest.approx(16, rel=0.01)
+
+
+# -- prefill/decode crossover on the analytic model ------------------------
+
+def test_decode_more_hbm_bound_than_matching_prefill():
+    """Compiled intensity (flops/byte): a decode step at kv_len=L sits
+    far below the matching prefill pass at seq=L for every batch/TP —
+    the campaign-record acceptance property."""
+    cfg = resolve_preset("v5e")
+    for batch in (1, 8):
+        for tp in (1, 4):
+            pre = compile_ops(
+                lm_layer_ops(DENSE, seq=1024, batch=batch, tp_shards=tp),
+                cfg, CompileOptions(n_tiles=2))
+            dec = compile_ops(
+                lm_layer_ops(DENSE, batch=batch, phase="decode",
+                             kv_len=1024, tp_shards=tp),
+                cfg, CompileOptions(n_tiles=2))
+            assert pre.hbm_bytes > 0 and dec.hbm_bytes > 0
+            assert (dec.total_flops / dec.hbm_bytes) < \
+                (pre.total_flops / pre.hbm_bytes)
+
+
+def test_analytic_crossover_hbm_sensitivity():
+    """Prefill/decode flops-bytes crossover sanity on the analytic
+    model: the two phases land on opposite sides of the chip's ridge
+    point, and halving HBM bandwidth hurts the decode makespan more
+    than the matching prefill makespan."""
+    from repro.core.vectorized import from_tasks, params_of, schedule_many
+
+    cfg = resolve_preset("v5e")
+    ridge = cfg.peak_tflops * 1e12 / (cfg.hbm_bytes_per_ns * 1e9)
+    pre = compile_ops(lm_layer_ops(DENSE, seq=1024, batch=1), cfg,
+                      CompileOptions(n_tiles=2))
+    dec = compile_ops(lm_layer_ops(DENSE, batch=1, phase="decode",
+                                   kv_len=1024), cfg,
+                      CompileOptions(n_tiles=2))
+    # intensity crossover: decode below the ridge, prefill above it
+    assert dec.total_flops / dec.hbm_bytes < ridge
+    assert pre.total_flops / pre.hbm_bytes > ridge
+
+    lo = cfg.replace(hbm_gbps=cfg.hbm_gbps / 2)
+    pm = np.stack([params_of(lo), params_of(cfg)])
+
+    def bw_speedup(cw):
+        t = schedule_many(from_tasks(cw.tasks), pm)
+        return float(t[0] / t[1])
+
+    s_dec, s_pre = bw_speedup(dec), bw_speedup(pre)
+    assert s_dec > 1.5          # memory-bound: BW cuts the step time
+    # the un-fused score matrix keeps prefill partially BW-sensitive
+    # in this op-list model, but decode must clearly dominate
+    assert s_pre < 1.4
+    assert s_dec > s_pre
+
+
+def test_decode_flops_scale_with_batch_not_ctx():
+    """Decode flops are O(batch) in the projections and O(batch*kv) in
+    attention only — doubling kv_len must not double total flops the
+    way doubling prefill seq does."""
+    f_kv1 = workload_flops(lm_layer_ops(DENSE, batch=4, phase="decode",
+                                        kv_len=1024))
+    f_kv2 = workload_flops(lm_layer_ops(DENSE, batch=4, phase="decode",
+                                        kv_len=2048))
+    assert f_kv2 / f_kv1 < 1.5
+    f_s1 = workload_flops(lm_layer_ops(DENSE, seq=1024, batch=4))
+    f_s2 = workload_flops(lm_layer_ops(DENSE, seq=2048, batch=4))
+    assert f_s2 / f_s1 > 1.9

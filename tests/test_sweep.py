@@ -161,6 +161,114 @@ def test_lm_campaign_tp_collectives_end_to_end():
     assert n_ici == {1: 0, 2: 2}
 
 
+def test_lm_grid_phase_kv_ep_axes():
+    """lm_grid phase/kv_len/ep axes expand into decode / EP workload
+    names; defaults reproduce the historical prefill-only expansion."""
+    spec = SweepSpec(name="ph",
+                     lm_grid={"arch": "qwen3-32b",
+                              "phase": ["prefill", "decode"],
+                              "seq": [64], "kv_len": [256, 512],
+                              "batch": [1], "tp": [1]},
+                     preset="v5e", n_tiles=[2])
+    assert spec.workloads == ["lm/qwen3-32b/s64b1tp1",
+                              "lm/qwen3-32b/decode/kv256b1tp1",
+                              "lm/qwen3-32b/decode/kv512b1tp1"]
+    # scalar convenience on phase + round-trip stability
+    spec2 = SweepSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert spec2.workloads == spec.workloads
+    dec = SweepSpec(name="d",
+                    lm_grid={"arch": "qwen3-32b", "phase": "decode",
+                             "kv_len": 128, "batch": [2], "tp": [1]},
+                    preset="v5e", n_tiles=[2])
+    assert dec.workloads == ["lm/qwen3-32b/decode/kv128b2tp1"]
+    ep = SweepSpec(name="e",
+                   lm_grid={"arch": "qwen3-moe-30b-a3b", "seq": [64],
+                            "batch": [1], "tp": [1], "ep": [1, 8]},
+                   preset="v5e", n_tiles=[2])
+    assert ep.workloads == ["lm/qwen3-moe-30b-a3b/s64b1tp1",
+                            "lm/qwen3-moe-30b-a3b/s64b1tp1ep8"]
+
+
+def test_lm_grid_phase_validation_errors():
+    with pytest.raises(KeyError):    # decode without kv_len
+        SweepSpec(name="x", lm_grid={"arch": "qwen3-32b",
+                                     "phase": ["decode"],
+                                     "batch": [1], "tp": [1]})
+    with pytest.raises(KeyError):    # prefill without seq
+        SweepSpec(name="x", lm_grid={"arch": "qwen3-32b",
+                                     "batch": [1], "tp": [1]})
+    with pytest.raises(ValueError):  # bogus phase
+        SweepSpec(name="x", lm_grid={"arch": "qwen3-32b",
+                                     "phase": ["bogus"], "seq": [1],
+                                     "batch": [1], "tp": [1]})
+    with pytest.raises(KeyError):    # ep>1 on a dense arch
+        SweepSpec(name="x", lm_grid={"arch": "qwen3-32b", "seq": [1],
+                                     "batch": [1], "tp": [1], "ep": [4]})
+    with pytest.raises(KeyError):    # kv_len without the decode phase
+        SweepSpec(name="x", lm_grid={"arch": "qwen3-32b", "seq": [512],
+                                     "kv_len": [512, 4096],
+                                     "batch": [1], "tp": [1]})
+    with pytest.raises(KeyError):    # seq in a decode-only grid
+        SweepSpec(name="x", lm_grid={"arch": "qwen3-32b",
+                                     "phase": ["decode"], "seq": [512],
+                                     "kv_len": [512],
+                                     "batch": [1], "tp": [1]})
+    with pytest.raises(ValueError):  # exactly one arch per grid
+        SweepSpec(name="x", lm_grid={"arch": ["qwen3-32b",
+                                              "qwen3-moe-30b-a3b"],
+                                     "seq": [1], "batch": [1], "tp": [1]})
+
+
+def test_builtin_decode_and_moe_campaigns_load():
+    """Acceptance: lm_decode_kv grids >1e4 analytic points over both
+    phases; moe_ep_grid grids EP degrees with alltoall collectives."""
+    spec = load_builtin_spec("lm_decode_kv")
+    assert spec.grid_size > 10_000
+    assert any("/decode/kv" in w for w in spec.workloads)
+    assert any("/s" in w for w in spec.workloads)
+    assert spec.description
+    moe = load_builtin_spec("moe_ep_grid")
+    assert any(w.endswith("ep16") for w in moe.workloads)
+    assert moe.description
+
+
+def test_phase_campaign_decode_more_hbm_bound_end_to_end():
+    """A tiny prefill+decode campaign runs through pre-screen AND event
+    refinement; decode records are strictly more HBM-bound (lower
+    flops/byte) than matching prefill records."""
+    spec = SweepSpec(name="phase_t",
+                     lm_grid={"arch": "qwen3-32b",
+                              "phase": ["prefill", "decode"],
+                              "seq": [256], "kv_len": [256],
+                              "batch": [2], "tp": [1]},
+                     preset="v5e", n_tiles=[2],
+                     refine=RefineSpec(mode="all"))
+    res = run_campaign(spec, workers=0, use_cache=False)
+    by_wl = {r["workload"]: r for r in res.records}
+    pre = by_wl["lm/qwen3-32b/s256b2tp1"]
+    dec = by_wl["lm/qwen3-32b/decode/kv256b2tp1"]
+    assert dec["flops_per_byte"] < pre["flops_per_byte"]
+    assert dec["hbm_bytes"] > 0 and pre["hbm_bytes"] > 0
+    for r in (pre, dec):
+        assert r["refined"] and r["time_ns"] > 0 and r["energy_j"] > 0
+
+
+def test_moe_ep_campaign_alltoall_end_to_end():
+    """An EP campaign refines on the event engine: the alltoall
+    collectives run on the ICI fabric and EP>1 still produces a valid
+    timeline + power record."""
+    spec = SweepSpec(name="ep_t",
+                     lm_grid={"arch": "qwen3-moe-30b-a3b", "seq": [64],
+                              "batch": [1], "tp": [1], "ep": [1, 4]},
+                     preset="v5e", n_tiles=[2],
+                     refine=RefineSpec(mode="all"))
+    res = run_campaign(spec, workers=0, use_cache=False)
+    assert len(res.refined) == 2
+    for r in res.refined:
+        assert r["time_ns"] > 0 and r["energy_j"] > 0
+        assert 0.25 < r["deviation"] < 4.0
+
+
 # -- pareto ----------------------------------------------------------------
 
 def test_pareto_front_simple():

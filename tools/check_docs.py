@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Docs integrity check (run by CI; stdlib only).
+
+1. Every intra-repo markdown link in ``README.md`` and ``docs/*.md``
+   must resolve to an existing file (anchors and external URLs are not
+   checked).
+2. Every package under ``src/repro/`` must be mentioned in
+   ``docs/ARCHITECTURE.md`` (as ``src/repro/<pkg>`` or ``repro.<pkg>``)
+   so the architecture tour cannot silently go stale.
+
+Exit code 0 when clean; 1 with one line per problem otherwise.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images; target split from an optional title
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp:")
+
+
+def _md_files():
+    files = [os.path.join(REPO, "README.md")]
+    files += sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_links() -> list:
+    problems = []
+    for path in _md_files():
+        rel = os.path.relpath(path, REPO)
+        text = open(path, encoding="utf-8").read()
+        # strip fenced code blocks: JSON/bash snippets are not links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                problems.append(f"{rel}: broken link -> {m.group(1)}")
+    return problems
+
+
+def check_architecture_mentions() -> list:
+    arch_md = os.path.join(REPO, "docs", "ARCHITECTURE.md")
+    if not os.path.exists(arch_md):
+        return ["docs/ARCHITECTURE.md is missing"]
+    text = open(arch_md, encoding="utf-8").read()
+    problems = []
+    pkg_root = os.path.join(REPO, "src", "repro")
+    for entry in sorted(os.listdir(pkg_root)):
+        full = os.path.join(pkg_root, entry)
+        if not os.path.isdir(full) or entry.startswith("__"):
+            continue
+        if f"src/repro/{entry}" not in text and f"repro.{entry}" not in text:
+            problems.append(
+                f"docs/ARCHITECTURE.md: package src/repro/{entry} "
+                f"is not mentioned")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_architecture_mentions()
+    for p in problems:
+        print(p, file=sys.stderr)
+    if problems:
+        print(f"docs check FAILED: {len(problems)} problem(s)",
+              file=sys.stderr)
+        return 1
+    n_files = len(_md_files())
+    print(f"docs check OK ({n_files} markdown files, all intra-repo links "
+          f"resolve, every src/repro package covered)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
