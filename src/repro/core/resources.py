@@ -218,6 +218,7 @@ class Resource:
         self.name = name
         self.users: List[_Request] = []
         self._queue: List[_Request] = []
+        self._seq = 0
 
     @property
     def count(self) -> int:
@@ -225,7 +226,13 @@ class Resource:
 
     def request(self, priority: float = 0.0) -> Event:
         req = _Request(self.env)
-        req.key = (priority, id(req))
+        # FIFO within a priority class via a per-resource sequence
+        # number — NEVER id(req): grant order among equal-priority
+        # contenders must be identical run to run, or simulations (and
+        # the byte-identical-records backend contract) go
+        # nondeterministic with memory layout
+        self._seq += 1
+        req.key = (priority, self._seq)
         self._queue.append(req)
         self._queue.sort(key=lambda r: r.key)
         self._dispatch()

@@ -13,6 +13,7 @@ deviation between the two.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
@@ -59,6 +60,19 @@ class TaskArrays:
     coll_bytes: np.ndarray      # per-phase link bytes
     cross_pod: np.ndarray       # [N] bool
     deps: np.ndarray            # [N, MAX_DEPS] int32, -1 padded
+
+
+# TaskArrays is a jax pytree (n_units static) so the batched-stats
+# kernel below is a single module-level jit: task graphs with the same
+# SHAPE — e.g. every layer body of an LM campaign, whatever its seq/
+# batch/TP values — share one XLA compilation instead of recompiling
+# per call.
+jax.tree_util.register_pytree_node(
+    TaskArrays,
+    lambda a: ((a.engine_class, a.engine_unit, a.flops, a.elems, a.bytes_,
+                a.io_bytes, a.gemm_m, a.gemm_n, a.coll_phases,
+                a.coll_bytes, a.cross_pod, a.deps), a.n_units),
+    lambda aux, c: TaskArrays(c[0], c[1], aux, *c[2:]))
 
 
 def params_of(cfg: HwConfig, mxu_eff: float = 0.0) -> np.ndarray:
@@ -184,30 +198,59 @@ def schedule(arrays: TaskArrays, params: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(ends)
 
 
+@jax.jit
+def _schedule_many_impl(arrays: TaskArrays,
+                        param_matrix: jnp.ndarray) -> jnp.ndarray:
+    return jax.vmap(lambda p: schedule(arrays, p))(param_matrix)
+
+
 def schedule_many(arrays: TaskArrays, param_matrix: np.ndarray) -> np.ndarray:
     """vmap over K parameter vectors -> K makespans in one XLA call."""
-    fn = jax.jit(jax.vmap(lambda p: schedule(arrays, p)))
-    return np.asarray(fn(jnp.asarray(param_matrix)))
+    return np.asarray(_schedule_many_impl(arrays,
+                                          jnp.asarray(param_matrix)))
 
 
-def schedule_stats(arrays: TaskArrays,
-                   params: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def schedule_stats(arrays: TaskArrays, params: jnp.ndarray, *,
+                   repeats: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Makespan + per-engine-class busy time under one parameter vector.
 
     The busy vector (``[N_ENGINE_CLASSES]``, summed task durations per
     class) is what the sweep pre-screen feeds the analytic Power-EM proxy:
     utilization(class) = busy / makespan, no event simulation needed.
+
+    ``repeats`` is the **layer-replication fast path**: a workload made
+    of ``repeats`` sequentially dependent copies of this task graph (a
+    full multi-layer LM: every layer re-streams its weights, so copy
+    i+1 starts after copy i) has makespan ``repeats * makespan(1)`` and
+    busy ``repeats * busy(1)`` in closed form under the list-scheduling
+    model — no per-layer loop, no longer scan. Cross-copy prefetch
+    overlap at layer seams is ignored; the event engine (which always
+    walks the full replicated graph) bounds that error via the campaign
+    ``deviation`` column.
     """
     dur = _durations(arrays, jnp.asarray(params))
     cls = jnp.asarray(arrays.engine_class)
     busy = jnp.zeros(N_ENGINE_CLASSES).at[cls].add(dur)
-    return schedule(arrays, params), busy
+    r = float(repeats)
+    return schedule(arrays, params) * r, busy * r
 
 
-def schedule_many_stats(arrays: TaskArrays, param_matrix: np.ndarray
+@functools.partial(jax.jit, static_argnames=("repeats",))
+def _schedule_many_stats_impl(arrays: TaskArrays, param_matrix: jnp.ndarray,
+                              repeats: int
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return jax.vmap(lambda p: schedule_stats(arrays, p,
+                                             repeats=repeats))(param_matrix)
+
+
+def schedule_many_stats(arrays: TaskArrays, param_matrix: np.ndarray, *,
+                        repeats: int = 1
                         ) -> Tuple[np.ndarray, np.ndarray]:
     """vmap over K parameter vectors -> (K makespans, [K, 4] busy times)
-    in one XLA call — the sweep campaign's batched pre-screen."""
-    fn = jax.jit(jax.vmap(lambda p: schedule_stats(arrays, p)))
-    mk, busy = fn(jnp.asarray(param_matrix))
+    in one XLA call — the sweep campaign's batched pre-screen.
+    ``repeats`` applies the closed-form layer replication of
+    ``schedule_stats`` to every parameter vector. Same-shaped task
+    graphs share one XLA compilation (TaskArrays is a pytree)."""
+    mk, busy = _schedule_many_stats_impl(arrays, jnp.asarray(param_matrix),
+                                         int(repeats))
     return np.asarray(mk), np.asarray(busy)

@@ -14,8 +14,14 @@ Concurrency is pure POSIX filesystem semantics — no locks, no network:
   get ``FileNotFoundError`` and move on.
 * **heartbeat lease** — a claiming worker touches its active file
   periodically. An active file whose mtime is older than ``lease_s`` is
-  presumed orphaned (killed worker) and **reclaimed**: renamed back
-  into ``jobs/`` where any worker can claim it again.
+  presumed orphaned (killed worker) and **reclaimed**: returned to
+  ``jobs/`` where any worker can claim it again.
+* **retry budget** — every reclaim increments the job's ``attempts``
+  counter. A job reclaimed more than ``retry_budget`` times is a
+  *poison job* (it kills every worker that touches it — an OOM, a
+  segfaulting extension, a pathological input): it is quarantined to
+  ``failed/`` instead of being lease-reclaimed forever, so a campaign
+  fails fast with a diagnosable error instead of cycling the fleet.
 * **complete** — results are staged as invisible ``.tmp`` files and
   published with ``os.replace`` so readers never observe a torn
   ``done`` file.
@@ -43,9 +49,10 @@ from ..sweep.cache import atomic_write_json
 from .backend import BackendError, Progress, _cache_put
 
 __all__ = ["Spool", "SpoolJob", "SpoolBackend", "DEFAULT_LEASE_S",
-           "worker_id"]
+           "DEFAULT_RETRY_BUDGET", "worker_id"]
 
 DEFAULT_LEASE_S = 60.0
+DEFAULT_RETRY_BUDGET = 3       # reclaims before a job is quarantined
 _STATES = ("jobs", "active", "done", "failed")
 
 
@@ -69,6 +76,7 @@ class SpoolJob:
     active_path: str
     worker: str
     t_claim: float
+    attempts: int = 0          # completed reclaim cycles before this claim
 
     def heartbeat(self) -> bool:
         """Refresh the lease; False if the job was reclaimed under us."""
@@ -82,9 +90,11 @@ class SpoolJob:
 class Spool:
     """One job spool rooted at a directory; see module docstring."""
 
-    def __init__(self, root: str, *, lease_s: float = DEFAULT_LEASE_S):
+    def __init__(self, root: str, *, lease_s: float = DEFAULT_LEASE_S,
+                 retry_budget: int = DEFAULT_RETRY_BUDGET):
         self.root = os.path.abspath(root)
         self.lease_s = lease_s
+        self.retry_budget = retry_budget
         for d in _STATES:
             os.makedirs(os.path.join(self.root, d), exist_ok=True)
 
@@ -170,7 +180,8 @@ class Spool:
                 os.utime(src)
                 os.rename(src, dst)
                 with open(dst) as f:
-                    payload = json.load(f)["payload"]
+                    job_d = json.load(f)
+                payload = job_d["payload"]
             except FileNotFoundError:
                 continue               # lost the race for this job
             except (json.JSONDecodeError, KeyError):
@@ -183,7 +194,8 @@ class Spool:
                 os.unlink(dst)
                 continue
             return SpoolJob(key=key, payload=payload, active_path=dst,
-                            worker=worker, t_claim=time.time())
+                            worker=worker, t_claim=time.time(),
+                            attempts=int(job_d.get("attempts", 0)))
         return None
 
     def complete(self, job: SpoolJob, record: Dict[str, Any], *,
@@ -214,7 +226,13 @@ class Spool:
 
     def reclaim(self, *, lease_s: Optional[float] = None,
                 now: Optional[float] = None) -> int:
-        """Return orphaned active jobs (stale heartbeat) to ``jobs/``."""
+        """Return orphaned active jobs (stale heartbeat) to ``jobs/``.
+
+        Each reclaim cycle increments the job's ``attempts`` counter; a
+        job past ``retry_budget`` reclaims is quarantined to ``failed/``
+        (poison job: it keeps killing its workers) instead of being
+        requeued forever. Quarantined jobs count toward the return
+        value (they were taken off a dead worker)."""
         lease = lease_s if lease_s is not None else self.lease_s
         now = now if now is not None else time.time()
         n = 0
@@ -226,7 +244,11 @@ class Spool:
                 continue
             if age <= lease:
                 continue
-            key = fname.split("@", 1)[0]
+            # partition, not split: a stray active file without an "@"
+            # (shared-directory operator artifact) must not abort the
+            # whole reclaim pass — it falls through to the corrupt-file
+            # quarantine below
+            key, _, worker = fname[:-len(".json")].partition("@")
             if os.path.exists(os.path.join(self._dir("done"),
                                            key + ".json")):
                 # finished but the worker died before releasing the claim
@@ -236,10 +258,40 @@ class Spool:
                     pass
                 continue
             try:
-                os.rename(p, os.path.join(self._dir("jobs"), key + ".json"))
-                n += 1
+                with open(p) as f:
+                    job_d = json.load(f)
+                attempts = int(job_d.get("attempts", 0)) + 1
             except FileNotFoundError:
+                continue               # released/reclaimed under us
+            except (json.JSONDecodeError, KeyError, ValueError):
+                _publish(self._dir("failed"), key,
+                         {"key": key, "error": "corrupt active file",
+                          "worker": worker, "t_failed": now})
+                try:
+                    os.unlink(p)
+                except FileNotFoundError:
+                    pass
+                n += 1
                 continue
+            if attempts > self.retry_budget:
+                _publish(self._dir("failed"), key,
+                         {"key": key, "worker": worker, "t_failed": now,
+                          "attempts": attempts,
+                          "error": f"retry budget exhausted: reclaimed "
+                                   f"from {attempts} dead workers "
+                                   f"(budget {self.retry_budget}); "
+                                   f"quarantined as a poison job"})
+            else:
+                # requeue with the bumped counter: publish-then-unlink
+                # so a crash in between leaves a claimable job file,
+                # never a lost one (claim() drops stale duplicates)
+                _publish(self._dir("jobs"), key, {**job_d, "key": key,
+                                                  "attempts": attempts})
+            try:
+                os.unlink(p)
+            except FileNotFoundError:
+                pass
+            n += 1
         return n
 
 

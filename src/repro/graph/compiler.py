@@ -88,9 +88,12 @@ def compile_ops(ops: Sequence[Op], cfg: HwConfig,
             waits.append(prev_barrier)
 
         # collectives run on the ICI fabric: one per-device task, no
-        # tiling, no weight traffic. allreduce = Megatron TP combine;
-        # alltoall = MoE expert-parallel dispatch/combine (ring phases
-        # and per-link bytes come from hw.ici.CollectiveSpec)
+        # tiling, no weight traffic. allreduce = Megatron TP combine /
+        # DP gradient sync; alltoall = MoE expert-parallel dispatch/
+        # combine (ring phases and per-link bytes come from
+        # hw.ici.CollectiveSpec); rings that leave the pod
+        # (Op.cross_pod, set by the PodShape placement) are paced by
+        # DCN instead of ICI
         if op.kind in _COLLECTIVE_OPS:
             done_b = next(_bid)
             tasks.append(Task(
@@ -98,6 +101,7 @@ def compile_ops(ops: Sequence[Op], cfg: HwConfig,
                 payload=CollectiveSpec(op=_COLLECTIVE_OPS[op.kind],
                                        payload_bytes=in_bytes,
                                        group_size=op.group,
+                                       cross_pod=op.cross_pod,
                                        name=op.name),
                 waits=tuple(waits), signals=(done_b,), name=op.name))
             prev_barrier = (done_b, 1)

@@ -46,13 +46,37 @@ list carries ``alltoall`` dispatch/combine collectives — the op-list
 mirror of ``models/moe.py``'s ``moe_ep`` shard_map path (capacity-
 bucketed tokens exchanged with ``jax.lax.all_to_all``).
 
+**Full-model workloads** (``lm_model_ops``) compose ``lm_layer_ops``
+into the paper's "full model performance ... at scale in minutes"
+object (§2.3): ``layers`` sequential copies of the layer op list (each
+layer's weights re-streamed from HBM, each layer's KV traffic emitted)
+plus a model head (final norm + vocab-sharded LM head), placed on a
+``hw.pod.PodShape`` (DP x EP x TP over pods). Placement semantics:
+
+* ``batch`` is the **global** batch; DP shards it (``batch/dp_shards``
+  sequences per chip). Inference phases need **no** DP collective —
+  replicas are independent — while ``phase="train"`` appends a DP
+  gradient all-reduce over the per-device weight-shard bytes (the
+  gradient/none split per phase).
+* TP all-reduces, EP all-to-alls, and the DP gradient all-reduce carry
+  ``Op.cross_pod`` from ``PodShape.crosses_pod(axis)``: a collective
+  whose ring leaves the pod is paced by DCN instead of ICI when
+  ``graph.compiler`` lowers it onto the fabric (symmetric replay: one
+  paced chip, ring collectives — see the ``hw/pod.py`` docstring).
+* ``phase="train"`` models a step as the standard 3x-forward shape:
+  forward + dgrad (same GEMMs, TP/EP collectives re-run) + wgrad (same
+  GEMMs, no collectives, no weight re-read) per layer.
+
 Parameterized workload names (``resolve_workload``) encode all of this:
 
-    lm/<arch>/s<seq>b<batch>tp<tp>[ep<ep>]          prefill
-    lm/<arch>/decode/kv<kv_len>b<batch>tp<tp>[ep<ep>]  decode
+    lm/<arch>/s<seq>b<batch>tp<tp>[ep<ep>]          prefill (one layer)
+    lm/<arch>/decode/kv<kv_len>b<batch>tp<tp>[ep<ep>]  decode (one layer)
+    lm/<arch>/L<layers>/[train/|decode/]...[dp<dp>][pod<chips>]  full model
 
-e.g. ``lm/qwen3-32b/decode/kv4096b8tp2`` or
-``lm/qwen3-moe-30b-a3b/s1024b4tp1ep16``.
+e.g. ``lm/qwen3-32b/decode/kv4096b8tp2`` (one decode layer) or
+``lm/qwen3-32b/L64/decode/kv4096b16tp4dp4pod8`` (the full 64-layer
+model, global batch 16 over DP=4, TP=4, on 8-chip pods) or
+``lm/qwen3-32b/L64/train/s1024b8tp4dp2``.
 """
 from __future__ import annotations
 
@@ -62,9 +86,11 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..configs.base import ArchConfig
+from ..hw.pod import PodShape
 
 __all__ = ["Op", "mobilenet_v2", "resnet50", "tiny_yolo_v2", "WORKLOADS",
-           "lm_layer_ops", "lm_workload_name", "lm_grid_names",
+           "lm_layer_ops", "lm_model_ops", "ModelParts", "model_parts",
+           "lm_workload_name", "lm_grid_names", "parse_lm_name",
            "resolve_workload", "is_workload", "workload_flops",
            "workload_bytes"]
 
@@ -90,6 +116,8 @@ class Op:
     stream: bool = False   # force HBM streaming even when the working set
     #                        fits VMEM (KV-cache reads/appends: the cache
     #                        lives in HBM across decode steps)
+    cross_pod: bool = False  # collective ring leaves the ICI domain and
+    #                          is paced by DCN (set from PodShape)
 
     @property
     def flops(self) -> float:
@@ -358,47 +386,247 @@ def lm_layer_ops(cfg: ArchConfig, *, seq: int = 0, batch: int,
     return ops
 
 
+# -- full-model composition -------------------------------------------------
+
+_MODEL_PHASES = ("prefill", "decode", "train")
+# op kind -> parallelism axis its collective group lives on
+_COLLECTIVE_AXIS = {"allreduce": "tp", "alltoall": "ep"}
+
+
+def _place(ops: List[Op], pod: PodShape) -> List[Op]:
+    """Stamp ``cross_pod`` onto collectives per the pod placement."""
+    return [dataclasses.replace(o, cross_pod=pod.crosses_pod(
+        _COLLECTIVE_AXIS[o.kind])) if o.kind in _COLLECTIVE_AXIS else o
+        for o in ops]
+
+
+def _lm_body_ops(cfg: ArchConfig, *, seq: int, local_batch: int, phase: str,
+                 kv_len: int, tp_shards: int, ep_shards: int, pod: PodShape,
+                 dtype_bytes: int) -> List[Op]:
+    """One layer of the full model (per-device, placed on ``pod``).
+
+    ``train`` is the standard 3x-forward step shape: forward + dgrad
+    (same GEMMs and TP/EP collectives, backward through the layer) +
+    wgrad (same GEMMs, no collectives, produces rather than reads
+    weights). Inference phases are ``lm_layer_ops`` verbatim.
+    """
+    if phase == "train":
+        fwd = lm_layer_ops(cfg, seq=seq, batch=local_batch,
+                           tp_shards=tp_shards, ep_shards=ep_shards,
+                           dtype_bytes=dtype_bytes)
+        body = list(fwd)
+        body += [dataclasses.replace(o, name="dgrad." + o.name)
+                 for o in fwd]
+        body += [dataclasses.replace(o, name="wgrad." + o.name, w_bytes=0.0)
+                 for o in fwd if o.kind not in _COLLECTIVE_AXIS]
+    else:
+        body = lm_layer_ops(cfg, seq=seq, batch=local_batch, phase=phase,
+                            kv_len=kv_len, tp_shards=tp_shards,
+                            ep_shards=ep_shards, dtype_bytes=dtype_bytes)
+    return _place(body, pod)
+
+
+def _lm_head_ops(cfg: ArchConfig, *, T: int, phase: str, layers: int,
+                 tp_shards: int, pod: PodShape, dtype_bytes: int,
+                 layer_w_bytes: float) -> List[Op]:
+    """Once-per-model ops: final norm + vocab-sharded LM head (logits
+    stay TP-sharded, no collective), plus — train only, the DP
+    "gradient" semantics — one gradient all-reduce over the per-device
+    weight-shard bytes. Inference DP replicas are independent: "none".
+    """
+    d = cfg.d_model
+    V = max(cfg.padded_vocab // max(tp_shards, 1), 1)
+    ops = [
+        Op("final_norm", "eltwise", elems=T * d, vec_kind="rsqrt",
+           in_bytes=T * d * dtype_bytes, out_bytes=T * d * dtype_bytes),
+        Op("lm_head", "matmul", m=T, n=V, k=d,
+           in_bytes=T * d * dtype_bytes, out_bytes=T * V * 4,
+           w_bytes=d * V * dtype_bytes),
+    ]
+    if phase == "train" and pod.dp > 1:
+        grad_bytes = layers * layer_w_bytes + d * V * dtype_bytes
+        ops.append(Op("grad_allreduce", "allreduce", in_bytes=grad_bytes,
+                      out_bytes=grad_bytes, group=pod.dp,
+                      cross_pod=pod.crosses_pod("dp")))
+    return ops
+
+
+def _model_args(cfg: ArchConfig, *, layers: int, batch: int, seq: int,
+                phase: str, kv_len: int, dp_shards: int, tp_shards: int,
+                ep_shards: int, pod_chips: int) -> Tuple[int, int, PodShape]:
+    """Validate full-model parameters; return (local_batch, T, pod)."""
+    if phase not in _MODEL_PHASES:
+        raise ValueError(f"phase must be prefill|decode|train, "
+                         f"got {phase!r}")
+    if layers < 1:
+        raise ValueError(f"full model needs layers >= 1, got {layers}")
+    if dp_shards < 1 or batch % dp_shards:
+        raise ValueError(f"global batch {batch} must divide over "
+                         f"dp_shards={dp_shards}")
+    if phase == "train" and (seq < 1 or kv_len):
+        raise ValueError("train phase needs seq >= 1 and no kv_len")
+    local = batch // dp_shards
+    if local < 1:
+        raise ValueError(f"batch {batch} < dp_shards {dp_shards}")
+    pod = PodShape(dp=dp_shards, tp=tp_shards, ep=ep_shards,
+                   pod_chips=pod_chips)
+    T = local if phase == "decode" else seq * local
+    return local, T, pod
+
+
+def lm_model_ops(cfg: ArchConfig, *, layers: int, batch: int, seq: int = 0,
+                 phase: str = "prefill", kv_len: int = 0,
+                 dp_shards: int = 1, tp_shards: int = 1, ep_shards: int = 1,
+                 pod_chips: int = 0, dtype_bytes: int = 2) -> List[Op]:
+    """Per-device op list for the FULL model on a pod shape.
+
+    ``layers`` sequential copies of the per-layer op list (ops renamed
+    ``L<i>.<name>``; every layer's weights re-stream HBM->VMEM, every
+    layer's KV traffic is emitted) followed by the model head. ``batch``
+    is the global batch, sharded over ``dp_shards`` replicas; TP/EP/DP
+    collectives carry ``cross_pod`` per ``PodShape(dp, tp, ep,
+    pod_chips)`` placement. Embedding lookup (a cheap gather) is not
+    modeled.
+
+    The per-layer body is exactly ``model_parts(name).body()``, so the
+    sweep pre-screen can evaluate one layer analytically and scale the
+    stats in closed form instead of walking ``layers`` copies — the
+    event engine still simulates this full list.
+    """
+    local, T, pod = _model_args(
+        cfg, layers=layers, batch=batch, seq=seq, phase=phase,
+        kv_len=kv_len, dp_shards=dp_shards, tp_shards=tp_shards,
+        ep_shards=ep_shards, pod_chips=pod_chips)
+    body = _lm_body_ops(cfg, seq=seq, local_batch=local, phase=phase,
+                        kv_len=kv_len, tp_shards=tp_shards,
+                        ep_shards=ep_shards, pod=pod,
+                        dtype_bytes=dtype_bytes)
+    layer_w = sum(o.w_bytes for o in body
+                  if not o.name.startswith(("dgrad.", "wgrad.")))
+    ops = [dataclasses.replace(o, name=f"L{i}.{o.name}")
+           for i in range(layers) for o in body]
+    ops += _lm_head_ops(cfg, T=T, phase=phase, layers=layers,
+                        tp_shards=tp_shards, pod=pod,
+                        dtype_bytes=dtype_bytes, layer_w_bytes=layer_w)
+    return ops
+
+
+@dataclass(frozen=True)
+class ModelParts:
+    """Layer-replication decomposition of a full-model workload.
+
+    ``full == layers x body (renamed L<i>.*) + head`` — the contract
+    ``tests/test_invariants.py`` locks down. ``body_key``/``head_key``
+    identify the part graphs independently of ``layers``, so a sweep
+    over layer counts compiles/pre-screens each distinct part once.
+    """
+
+    layers: int
+    body: Callable[[], List[Op]]
+    head: Callable[[], List[Op]]
+    body_key: str
+    head_key: str
+
+
 # -- parameterized LM workload names ---------------------------------------
 #
 # ``lm/<arch>/s<seq>b<batch>tp<tp>[ep<ep>]`` names one prefill
 # ``lm_layer_ops`` instance; ``lm/<arch>/decode/kv<kv>b<batch>tp<tp>[ep<ep>]``
 # names one decode step (one token per sequence against a <kv>-token KV
-# cache). ``resolve_workload`` accepts these anywhere a plain
-# ``WORKLOADS`` name is accepted, which is what lets sweep campaigns
-# grid LM workloads over phase x seq/kv_len x batch x TP x EP.
+# cache). An ``L<layers>/`` segment selects the FULL model
+# (``lm_model_ops``): ``train/`` becomes a valid phase, ``b<batch>`` is
+# the global batch, and optional ``dp<dp>``/``pod<chips>`` suffixes set
+# the DP degree and pod size. ``resolve_workload`` accepts these
+# anywhere a plain ``WORKLOADS`` name is accepted, which is what lets
+# sweep campaigns grid LM workloads over phase x seq/kv_len x batch x
+# TP x EP x DP x layers x pod shape.
 
 _LM_NAME_RE = re.compile(
     r"^lm/(?P<arch>[A-Za-z0-9_.\-]+)/"
-    r"(?:decode/kv(?P<kv>\d+)|s(?P<seq>\d+))"
-    r"b(?P<batch>\d+)tp(?P<tp>\d+)(?:ep(?P<ep>\d+))?$")
+    r"(?:L(?P<layers>\d+)/)?"
+    r"(?:train/s(?P<trseq>\d+)|decode/kv(?P<kv>\d+)|s(?P<seq>\d+))"
+    r"b(?P<batch>\d+)tp(?P<tp>\d+)(?:ep(?P<ep>\d+))?"
+    r"(?:dp(?P<dp>\d+))?(?:pod(?P<pod>\d+))?$")
 
 
 def lm_workload_name(arch: str, *, seq: int = 0, batch: int, tp: int,
                      phase: str = "prefill", kv_len: int = 0,
-                     ep: int = 1) -> str:
-    if phase == "decode":
+                     ep: int = 1, layers: int = 0, dp: int = 1,
+                     pod: int = 0) -> str:
+    """Single-layer name (``layers=0``, historical spelling) or
+    full-model name (``layers>=1`` adds the ``L<layers>/`` segment and
+    unlocks ``train``/``dp``/``pod``)."""
+    if phase == "train":
+        head = f"train/s{seq}"
+    elif phase == "decode":
         head = f"decode/kv{kv_len}"
     else:
         head = f"s{seq}"
-    return f"lm/{arch}/{head}b{batch}tp{tp}" + (f"ep{ep}" if ep > 1 else "")
+    model = f"L{layers}/" if layers else ""
+    return (f"lm/{arch}/{model}{head}b{batch}tp{tp}"
+            + (f"ep{ep}" if ep > 1 else "")
+            + (f"dp{dp}" if dp > 1 else "")
+            + (f"pod{pod}" if pod else ""))
 
 
 def lm_grid_names(arch: str, seq: List[int], batch: List[int],
                   tp: List[int], *, phase: List[str] = ("prefill",),
                   kv_len: List[int] = (0,),
-                  ep: List[int] = (1,)) -> List[str]:
-    """Expand a phase x (seq | kv_len) x batch x TP x EP grid into
-    workload names. Grid order: phase-major, then seq (prefill) or
-    kv_len (decode), then batch, tp, ep — so the default arguments
-    reproduce the historical seq-major prefill ordering."""
+                  ep: List[int] = (1,), layers: List[int] = (0,),
+                  dp: List[int] = (1,),
+                  pod: List[int] = (0,)) -> List[str]:
+    """Expand a phase x (seq | kv_len) x batch x TP x EP x DP x layers
+    x pod grid into workload names. Grid order: phase-major, then seq
+    (prefill/train) or kv_len (decode), then batch, tp, ep, dp, layers,
+    pod — so the default arguments reproduce the historical seq-major
+    prefill ordering."""
     out: List[str] = []
     for ph in phase:
         lens = kv_len if ph == "decode" else seq
         out += [lm_workload_name(arch, seq=0 if ph == "decode" else s,
                                  batch=b, tp=t, phase=ph,
-                                 kv_len=s if ph == "decode" else 0, ep=e)
-                for s in lens for b in batch for t in tp for e in ep]
+                                 kv_len=s if ph == "decode" else 0, ep=e,
+                                 layers=lyr, dp=d, pod=pc)
+                for s in lens for b in batch for t in tp for e in ep
+                for d in dp for lyr in layers for pc in pod]
     return out
+
+
+def parse_lm_name(name: str) -> Optional[Dict[str, object]]:
+    """Parse an ``lm/...`` name into its parameters (validated), or
+    None when the name is not LM-shaped. Raises KeyError on an LM name
+    with bad parameters (unknown arch, dp on a single layer, ...)."""
+    m = _LM_NAME_RE.match(name)
+    if not m:
+        return None
+    from ..configs import get_config   # deferred: avoids import cycle
+    cfg = get_config(m["arch"])        # raises KeyError on bad arch
+    phase = ("train" if m["trseq"] else
+             "decode" if m["kv"] else "prefill")
+    seq = int(m["trseq"] or m["seq"] or 0)
+    kv = int(m["kv"]) if m["kv"] else 0
+    batch, tp = int(m["batch"]), int(m["tp"])
+    ep = int(m["ep"]) if m["ep"] else 1
+    layers = int(m["layers"]) if m["layers"] else 0
+    dp = int(m["dp"]) if m["dp"] else 1
+    pod = int(m["pod"]) if m["pod"] else 0
+    if m["layers"] is not None and layers < 1:
+        raise KeyError(f"full model needs L >= 1 in {name!r}")
+    if batch < 1 or tp < 1 or ep < 1 or dp < 1 or \
+            (kv < 1 if phase == "decode" else seq < 1):
+        raise KeyError(f"bad LM workload parameters in {name!r}")
+    if ep > 1 and not cfg.is_moe:
+        raise KeyError(f"ep>1 in {name!r} needs a MoE arch; "
+                       f"{cfg.name} is {cfg.family}")
+    if not layers and (dp > 1 or pod or phase == "train"):
+        raise KeyError(f"train/dp/pod in {name!r} need the full-model "
+                       f"L<layers>/ segment")
+    if layers and batch % dp:
+        raise KeyError(f"global batch {batch} must divide over dp={dp} "
+                       f"in {name!r}")
+    return {"cfg": cfg, "arch": m["arch"], "phase": phase, "seq": seq,
+            "kv_len": kv, "batch": batch, "tp": tp, "ep": ep,
+            "layers": layers, "dp": dp, "pod": pod}
 
 
 def resolve_workload(name: str) -> Callable[[], List[Op]]:
@@ -406,31 +634,72 @@ def resolve_workload(name: str) -> Callable[[], List[Op]]:
     to its op-list factory; raises KeyError for unknown names."""
     if name in WORKLOADS:
         return WORKLOADS[name]
-    m = _LM_NAME_RE.match(name)
-    if not m:
+    p = parse_lm_name(name)
+    if p is None:
         raise KeyError(
             f"unknown workload {name!r}; have {sorted(WORKLOADS)} or "
             f"'lm/<arch>/s<seq>b<batch>tp<tp>[ep<ep>]' or "
-            f"'lm/<arch>/decode/kv<kv>b<batch>tp<tp>[ep<ep>]'")
-    from ..configs import get_config   # deferred: avoids import cycle
-    cfg = get_config(m["arch"])        # raises KeyError on bad arch
-    decode = m["kv"] is not None
-    seq = int(m["seq"]) if m["seq"] else 0
-    kv = int(m["kv"]) if m["kv"] else 0
-    batch, tp = int(m["batch"]), int(m["tp"])
-    ep = int(m["ep"]) if m["ep"] else 1
-    if batch < 1 or tp < 1 or ep < 1 or (kv < 1 if decode else seq < 1):
-        raise KeyError(f"bad LM workload parameters in {name!r}")
-    if ep > 1 and not cfg.is_moe:
-        raise KeyError(f"ep>1 in {name!r} needs a MoE arch; "
-                       f"{cfg.name} is {cfg.family}")
+            f"'lm/<arch>/decode/kv<kv>b<batch>tp<tp>[ep<ep>]' or "
+            f"'lm/<arch>/L<layers>/[train/|decode/]...[dp<dp>]"
+            f"[pod<chips>]'")
+    cfg = p["cfg"]
 
-    def build() -> List[Op]:
-        return lm_layer_ops(cfg, seq=seq, batch=batch, tp_shards=tp,
-                            phase="decode" if decode else "prefill",
-                            kv_len=kv, ep_shards=ep)
+    if p["layers"]:
+        def build() -> List[Op]:
+            return lm_model_ops(cfg, layers=p["layers"], batch=p["batch"],
+                                seq=p["seq"], phase=p["phase"],
+                                kv_len=p["kv_len"], dp_shards=p["dp"],
+                                tp_shards=p["tp"], ep_shards=p["ep"],
+                                pod_chips=p["pod"])
+    else:
+        def build() -> List[Op]:
+            return lm_layer_ops(cfg, seq=p["seq"], batch=p["batch"],
+                                tp_shards=p["tp"], phase=p["phase"],
+                                kv_len=p["kv_len"], ep_shards=p["ep"])
 
     return build
+
+
+def model_parts(name: str) -> Optional[ModelParts]:
+    """The layer-replication decomposition of a full-model workload
+    name, or None for CNN / single-layer names. The sweep pre-screen
+    uses this to compile + analytically schedule one layer body and one
+    head instead of ``layers`` copies (``core.vectorized``'s closed-form
+    ``repeats`` path); ``resolve_workload`` still builds the full list
+    for event-engine refinement."""
+    if name in WORKLOADS:
+        return None
+    p = parse_lm_name(name)
+    if p is None or not p["layers"]:
+        return None
+    cfg = p["cfg"]
+    local, T, pod = _model_args(
+        cfg, layers=p["layers"], batch=p["batch"], seq=p["seq"],
+        phase=p["phase"], kv_len=p["kv_len"], dp_shards=p["dp"],
+        tp_shards=p["tp"], ep_shards=p["ep"], pod_chips=p["pod"])
+
+    def body() -> List[Op]:
+        return _lm_body_ops(cfg, seq=p["seq"], local_batch=local,
+                            phase=p["phase"], kv_len=p["kv_len"],
+                            tp_shards=p["tp"], ep_shards=p["ep"], pod=pod,
+                            dtype_bytes=2)
+
+    def head() -> List[Op]:
+        layer_w = sum(o.w_bytes for o in body()
+                      if not o.name.startswith(("dgrad.", "wgrad.")))
+        return _lm_head_ops(cfg, T=T, phase=p["phase"], layers=p["layers"],
+                            tp_shards=p["tp"], pod=pod, dtype_bytes=2,
+                            layer_w_bytes=layer_w)
+
+    # part keys are layers-independent EXCEPT the head in train+DP,
+    # whose grad_allreduce payload scales with the layer count
+    base = (f"{p['arch']}/{p['phase']}/s{p['seq']}kv{p['kv_len']}"
+            f"b{p['batch']}tp{p['tp']}ep{p['ep']}dp{p['dp']}pod{p['pod']}")
+    head_key = base + "/head"
+    if p["phase"] == "train" and p["dp"] > 1:
+        head_key += f"L{p['layers']}"
+    return ModelParts(layers=p["layers"], body=body, head=head,
+                      body_key=base + "/body", head_key=head_key)
 
 
 def is_workload(name: str) -> bool:

@@ -16,6 +16,7 @@ compute/collective overlap XLA scheduled.
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 from ..graph.hlo_parser import TaskSpec
@@ -27,7 +28,57 @@ from .mxu import GemmSpec
 from .presets import HwConfig
 from .vecunit import VecSpec
 
-__all__ = ["hlo_to_tasks", "simulate_program"]
+__all__ = ["PodShape", "hlo_to_tasks", "simulate_program"]
+
+
+@dataclass(frozen=True)
+class PodShape:
+    """Placement of a DP x EP x TP parallelism cube onto pods.
+
+    Chips are laid out with TP innermost (contiguous chips, fastest
+    collectives), EP next, DP outermost — the standard serving/training
+    placement. ``pod_chips`` is the size of one ICI domain; a collective
+    whose group *span* (group size x chip stride of its axis) exceeds it
+    has at least one ring hop crossing pod boundaries, so the whole ring
+    is paced by the DCN segment (``CollectiveSpec.cross_pod`` routes it
+    onto the DCN resource in ``hw.ici.IciFabric``). ``pod_chips == 0``
+    means a single unbounded pod (nothing crosses).
+    """
+
+    dp: int = 1
+    tp: int = 1
+    ep: int = 1
+    pod_chips: int = 0
+
+    def __post_init__(self):
+        if min(self.dp, self.tp, self.ep) < 1 or self.pod_chips < 0:
+            raise ValueError(f"bad pod shape {self}")
+
+    @property
+    def chips(self) -> int:
+        return self.dp * self.tp * self.ep
+
+    @property
+    def n_pods(self) -> int:
+        if not self.pod_chips:
+            return 1
+        return -(-self.chips // self.pod_chips)
+
+    def span(self, axis: str) -> int:
+        """Chip span of one collective group on ``axis``: group size
+        times the stride between successive members (TP stride 1, EP
+        stride tp, DP stride tp*ep)."""
+        if axis == "tp":
+            return self.tp
+        if axis == "ep":
+            return self.tp * self.ep
+        if axis == "dp":
+            return self.tp * self.ep * self.dp
+        raise ValueError(f"axis must be tp|ep|dp, got {axis!r}")
+
+    def crosses_pod(self, axis: str) -> bool:
+        """True when an ``axis`` collective's ring leaves the pod."""
+        return bool(self.pod_chips) and self.span(axis) > self.pod_chips
 
 
 def _gemm_dims(flops: float, bytes_in: float, bytes_out: float

@@ -150,8 +150,10 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
     # -- phase 1: batched analytic pre-screen (one XLA call per cell) ----
     t0 = time.time()
     screens = []
+    part_memo: Dict[Any, Any] = {}     # full-model body/head screens are
+    #                                    shared across cells (layers axis)
     for cell in cells:
-        scr = prescreen_cell(cell)
+        scr = prescreen_cell(cell, memo=part_memo)
         screens.append(scr)
         _log(progress, f"prescreen {cell.label}: {len(cell.points)} points "
              f"in one XLA call ({scr.wall_s:.2f}s)")

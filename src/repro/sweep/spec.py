@@ -33,12 +33,19 @@ Worked example — an LM campaign over inference phase and KV length::
     >>> result = run_campaign(spec, workers=0)   # doctest: +SKIP
 
 ``lm_grid`` keys: ``arch`` (registry id), ``phase`` (subset of
-``["prefill", "decode"]``, default prefill), ``seq`` (prefill prompt
-lengths), ``kv_len`` (decode KV-cache lengths), ``batch``, ``tp``
-(tensor-parallel degrees) and ``ep`` (MoE expert-parallel degrees —
-``ep > 1`` adds alltoall dispatch/combine collectives and needs a MoE
-arch). Every expanded workload is its own structural cell. Scalars are
-accepted wherever a list is expected. Full field reference:
+``["prefill", "decode", "train"]``, default prefill), ``seq``
+(prefill/train prompt lengths), ``kv_len`` (decode KV-cache lengths),
+``batch``, ``tp`` (tensor-parallel degrees) and ``ep`` (MoE
+expert-parallel degrees — ``ep > 1`` adds alltoall dispatch/combine
+collectives and needs a MoE arch). Adding a ``layers`` key switches the
+grid to **full-model** workloads (``graph.workloads.lm_model_ops``) and
+unlocks the pod-shape axes: ``dp`` (data-parallel degrees; ``batch``
+becomes the global batch, and ``phase="train"`` adds the DP gradient
+all-reduce) and ``pod`` (chips per ICI domain — collectives whose ring
+leaves the pod run at DCN speed). Every expanded workload is its own
+structural cell, but full-model cells share their per-layer pre-screen
+across the ``layers`` axis (the layer-replication fast path). Scalars
+are accepted wherever a list is expected. Full field reference:
 ``docs/CAMPAIGNS.md``.
 """
 from __future__ import annotations
@@ -127,34 +134,55 @@ class SweepSpec:
                                  f"got {archs}")
             arch = archs[0]
             phase = g.pop("phase", ["prefill"])
-            bad_ph = [p for p in phase if p not in ("prefill", "decode")]
+            bad_ph = [p for p in phase
+                      if p not in ("prefill", "decode", "train")]
             if bad_ph:
-                raise ValueError(f"lm_grid phase must be prefill|decode, "
-                                 f"got {bad_ph}")
+                raise ValueError(f"lm_grid phase must be prefill|decode|"
+                                 f"train, got {bad_ph}")
             seq = g.pop("seq", [])
             kv_len = g.pop("kv_len", [])
             ep = g.pop("ep", [1])
+            layers = g.pop("layers", [])
+            dp = g.pop("dp", [1])
+            pod = g.pop("pod", [0])
+            seq_phases = [p for p in phase if p != "decode"]
             missing = [k for k, need in
                        [("arch", arch is None), ("batch", "batch" not in g),
                         ("tp", "tp" not in g),
-                        ("seq", "prefill" in phase and not seq),
+                        ("seq", bool(seq_phases) and not seq),
                         ("kv_len", "decode" in phase and not kv_len)]
                        if need]
             if missing:
                 raise KeyError(
-                    f"lm_grid needs arch/batch/tp, plus seq for prefill "
-                    f"and kv_len for decode; missing {missing}")
+                    f"lm_grid needs arch/batch/tp, plus seq for prefill/"
+                    f"train and kv_len for decode; missing {missing}")
+            # dp/pod/train are pod-shape semantics of full-model
+            # workloads; without a layers axis they would be silently
+            # meaningless — reject them
+            needs_layers = [k for k, bad in
+                            [("dp", any(d > 1 for d in dp)),
+                             ("pod", any(p > 0 for p in pod)),
+                             ("phase=train", "train" in phase)] if bad]
+            if needs_layers and not layers:
+                raise KeyError(
+                    f"lm_grid {needs_layers} need a 'layers' axis "
+                    f"(full-model workloads)")
+            if any(lyr < 1 for lyr in layers):
+                raise ValueError(f"lm_grid layers must be >= 1, "
+                                 f"got {layers}")
             # an axis whose phase is absent would silently vanish from
             # the grid — reject it like an unknown key
-            stray = [k for k, vals, ph in
-                     [("seq", seq, "prefill"), ("kv_len", kv_len, "decode")]
-                     if vals and ph not in phase]
+            stray = [k for k, vals, ok in
+                     [("seq", seq, bool(seq_phases)),
+                      ("kv_len", kv_len, "decode" in phase)]
+                     if vals and not ok]
             if stray:
                 raise KeyError(
                     f"lm_grid axis {stray} given but its phase is not in "
                     f"phase={phase}")
             names = lm_grid_names(arch, seq, g.pop("batch"), g.pop("tp"),
-                                  phase=phase, kv_len=kv_len, ep=ep)
+                                  phase=phase, kv_len=kv_len, ep=ep,
+                                  layers=layers or [0], dp=dp, pod=pod)
             if g:
                 raise KeyError(f"unknown lm_grid keys {sorted(g)}")
             # idempotent: to_dict/from_dict round-trips re-expand the

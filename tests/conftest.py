@@ -22,3 +22,10 @@ except ImportError:  # pragma: no cover - exercised in hermetic containers
     import _hypothesis_stub
 
     _hypothesis_stub.install()
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate the frozen campaign records under tests/golden/ "
+             "(tests/test_golden.py) instead of comparing against them")

@@ -170,6 +170,51 @@ def test_spool_failed_job_is_retried_on_resubmit(tmp_path):
     assert spool.counts()["jobs"] == 1
 
 
+def test_spool_poison_job_quarantined_after_retry_budget(tmp_path):
+    """Kill-loop: a poison job (every worker that claims it dies without
+    heartbeating) is reclaimed at most ``retry_budget`` times, then
+    quarantined to failed/ — never lease-reclaimed forever."""
+    spool = Spool(str(tmp_path / "sp"), lease_s=60.0, retry_budget=2)
+    spool.submit("poison", {"x": 1})
+    cycles = 0
+    while cycles < 10:                             # kill loop
+        job = spool.claim(f"doomed-{cycles}")
+        if job is None:
+            break
+        assert job.key == "poison" and job.attempts == cycles
+        old = time.time() - 120.0                  # worker dies silently
+        os.utime(job.active_path, (old, old))
+        assert spool.reclaim() == 1
+        cycles += 1
+    # initial claim + retry_budget requeues, then quarantine
+    assert cycles == spool.retry_budget + 1
+    assert spool.counts() == {"jobs": 0, "active": 0, "done": 0,
+                              "failed": 1}
+    fail = spool.failure("poison")
+    assert "retry budget exhausted" in fail["error"]
+    assert fail["attempts"] == spool.retry_budget + 1
+    # an operator resubmit gives the job a fresh budget
+    assert spool.submit("poison", {"x": 1})
+    job = spool.claim("w-new")
+    assert job is not None and job.attempts == 0
+
+
+def test_spool_healthy_slow_job_survives_the_budget(tmp_path):
+    """The budget counts dead-worker reclaims, not wall time: a job
+    whose worker heartbeats is never charged an attempt. (Lease is 20x
+    the heartbeat interval so a loaded CI machine can't fake a death.)"""
+    spool = Spool(str(tmp_path / "sp"), lease_s=2.0, retry_budget=1)
+    spool.submit("slow", {"x": 1})
+    job = spool.claim("w0")
+    for _ in range(4):
+        time.sleep(0.1)
+        assert job.heartbeat()
+        assert spool.reclaim() == 0                # lease always fresh
+    spool.complete(job, {"ok": True}, wall_s=0.4)
+    assert spool.result("slow")["record"] == {"ok": True}
+    assert spool.counts()["failed"] == 0
+
+
 # -- worker loop -----------------------------------------------------------
 
 def test_run_worker_drains_and_publishes(tmp_path):

@@ -1,0 +1,154 @@
+"""Golden-record regression fixtures (ISSUE 4).
+
+Small, deterministic slices of the three LM campaign families —
+``lm_decode_kv``, ``moe_ep_grid``, and the full-model ``lm_full_pod`` —
+are frozen as canonicalized record lists under ``tests/golden/``. The
+tests assert:
+
+* **cross-backend byte-identity** — inline, pool, and spool backends
+  produce byte-for-byte identical campaign records for the same spec
+  (the ``repro.exec`` Backend contract at the record level);
+* **golden stability** — today's records still match the frozen
+  fixtures, so any semantic drift in the op lists, compiler, analytic
+  scheduler, event engine, or Power-EM shows up as a diff, not as a
+  silently shifted campaign.
+
+Regenerate after an INTENDED semantic change with::
+
+    PYTHONPATH=src python -m pytest tests/test_golden.py --update-golden
+
+and commit the diff under ``tests/golden/`` with the change that caused
+it. Floats are rounded to 8 significant digits in the frozen form so
+the comparison is robust to cross-platform last-ulp noise while still
+catching any real modeling change.
+"""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.exec import SpoolBackend, get_backend, run_worker
+from repro.sweep import RefineSpec, SweepSpec
+from repro.sweep.runner import run_campaign
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _specs():
+    """The three frozen campaign slices (tiny but structurally faithful:
+    both phases, EP alltoalls, full-model layers/dp/pod axes)."""
+    return {
+        "lm_decode_kv_slice": SweepSpec(
+            name="lm_decode_kv_slice",
+            lm_grid={"arch": "qwen3-32b", "phase": ["prefill", "decode"],
+                     "seq": [64], "kv_len": [64], "batch": [2],
+                     "tp": [1, 2]},
+            preset="v5e", axes={"clock_ghz": [0.6, 0.94]}, n_tiles=[2],
+            refine=RefineSpec(mode="pareto", max_points=1,
+                              pti_ns=50_000.0)),
+        "moe_ep_grid_slice": SweepSpec(
+            name="moe_ep_grid_slice",
+            lm_grid={"arch": "qwen3-moe-30b-a3b", "seq": [64],
+                     "batch": [1], "tp": [1], "ep": [1, 4]},
+            preset="v5e", axes={"hbm_gbps": [409.0, 819.0]}, n_tiles=[2],
+            refine=RefineSpec(mode="pareto", max_points=1,
+                              pti_ns=50_000.0)),
+        "lm_full_pod_slice": SweepSpec(
+            name="lm_full_pod_slice",
+            lm_grid={"arch": "qwen3-32b", "phase": ["prefill", "decode"],
+                     "seq": [64], "kv_len": [64], "batch": [4], "tp": [2],
+                     "dp": [2], "layers": [2], "pod": [2]},
+            preset="v5e", axes={"clock_ghz": [0.6, 0.94]}, n_tiles=[2],
+            refine=RefineSpec(mode="pareto", max_points=1,
+                              pti_ns=50_000.0)),
+    }
+
+
+def _freeze(records):
+    """Canonical golden form, cross-platform-stable:
+
+    * analytic fields (XLA f32 output: ``analytic_*``, ``deviation``)
+      are rounded to 6 significant digits — inside f32 resolution, so
+      vectorization differences between CPU targets cannot flip them;
+    * everything else (event engine + Power-EM: pure-Python IEEE f64,
+      bit-deterministic) keeps 10 significant digits.
+    """
+    def rnd(o, coarse=False):
+        if isinstance(o, float):
+            return float(f"{o:.6g}" if coarse else f"{o:.10g}")
+        if isinstance(o, dict):
+            return {k: rnd(v, coarse or k.startswith("analytic")
+                           or k == "deviation")
+                    for k, v in sorted(o.items())}
+        if isinstance(o, list):
+            return [rnd(v, coarse) for v in o]
+        return o
+
+    return rnd(json.loads(json.dumps(records, default=float)))
+
+
+def _golden_path(name):
+    return os.path.join(GOLDEN_DIR, f"{name}.json")
+
+
+def _drain_in_thread(root):
+    """In-process spool worker (no subprocess: fast-lane friendly)."""
+    from repro.sweep.refine import refine_point
+
+    stop = threading.Event()
+
+    def loop():
+        while not stop.is_set():
+            if run_worker(root, worker="golden-w", hb_s=0.2,
+                          refine_fn=refine_point) == 0:
+                time.sleep(0.05)
+
+    t = threading.Thread(target=loop, daemon=True)
+    t.start()
+    return t, stop
+
+
+@pytest.mark.parametrize("name", sorted(_specs()))
+def test_golden_records_and_backend_identity(name, tmp_path, request):
+    """Inline/pool/spool records are byte-identical, and match the
+    frozen fixture (or regenerate it under ``--update-golden``)."""
+    spec = _specs()[name]
+    inline = run_campaign(spec, backend="inline", use_cache=False)
+
+    # cross-backend byte-identity on the raw (un-rounded) records
+    pool = run_campaign(spec, backend=get_backend("pool", workers=2),
+                        use_cache=False)
+    root = str(tmp_path / "spool")
+    t, stop = _drain_in_thread(root)
+    try:
+        spool = run_campaign(
+            spec, backend=SpoolBackend(root, workers=0, poll_s=0.05,
+                                       timeout_s=300),
+            use_cache=False)
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    blobs = {bk: json.dumps(res.records, sort_keys=True)
+             for bk, res in [("inline", inline), ("pool", pool),
+                             ("spool", spool)]}
+    assert blobs["inline"] == blobs["pool"] == blobs["spool"]
+
+    frozen = _freeze(inline.records)
+    path = _golden_path(name)
+    if request.config.getoption("--update-golden"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(frozen, f, indent=1, sort_keys=True)
+            f.write("\n")
+        return
+    assert os.path.exists(path), (
+        f"missing golden fixture {path}; generate it with "
+        f"`python -m pytest tests/test_golden.py --update-golden`")
+    with open(path) as f:
+        golden = json.load(f)
+    assert frozen == golden, (
+        f"campaign records for {name} drifted from tests/golden/; if the "
+        f"modeling change is intended, rerun with --update-golden and "
+        f"commit the diff")

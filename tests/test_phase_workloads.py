@@ -194,6 +194,102 @@ def test_analytic_crossover_hbm_sensitivity():
     assert s_dec > s_pre
 
 
+def test_model_ops_restream_weights_per_layer():
+    """Full-model composition re-streams every layer's weights from HBM:
+    weight bytes scale linearly with the layer count, and each layer's
+    ops carry its own L<i>. prefix."""
+    from repro.graph.workloads import lm_model_ops
+
+    def w_bytes(layers):
+        ops = lm_model_ops(DENSE, layers=layers, seq=64, batch=2)
+        return sum(o.w_bytes for o in ops if o.name != "lm_head")
+
+    assert w_bytes(4) == pytest.approx(4 * w_bytes(1), rel=1e-12)
+    ops = lm_model_ops(DENSE, layers=3, seq=64, batch=2)
+    prefixes = {o.name.split(".", 1)[0] for o in ops if "." in o.name}
+    assert prefixes == {"L0", "L1", "L2"}
+    assert [o.name for o in ops[-2:]] == ["final_norm", "lm_head"]
+    # the LM head is vocab-sharded under TP
+    head1 = next(o for o in lm_model_ops(DENSE, layers=1, seq=64, batch=2)
+                 if o.name == "lm_head")
+    head4 = next(o for o in lm_model_ops(DENSE, layers=1, seq=64, batch=2,
+                                         tp_shards=4)
+                 if o.name == "lm_head")
+    assert head4.n == head1.n // 4
+
+
+def test_train_phase_dp_gradient_vs_inference_none():
+    """DP semantics per phase: train appends ONE gradient all-reduce
+    over the per-device weight-shard bytes (group=dp, backward modeled
+    as dgrad+wgrad copies); prefill/decode DP adds no collective, only
+    shards the global batch."""
+    from repro.graph.workloads import lm_model_ops
+
+    tr = lm_model_ops(DENSE, layers=2, seq=64, batch=8, phase="train",
+                      dp_shards=4, tp_shards=2)
+    gar = [o for o in tr if o.name == "grad_allreduce"]
+    assert len(gar) == 1 and gar[0].group == 4
+    fwd_w = sum(o.w_bytes for o in lm_model_ops(
+        DENSE, layers=2, seq=64, batch=8, phase="train", dp_shards=1,
+        tp_shards=2) if o.name.startswith("L") and
+        ".dgrad." not in o.name and ".wgrad." not in o.name)
+    head_w = next(o.w_bytes for o in tr if o.name == "lm_head")
+    assert gar[0].in_bytes == pytest.approx(fwd_w + head_w, rel=1e-9)
+    # dgrad re-runs the TP collectives, wgrad runs none and reads no
+    # weights (it produces them)
+    assert any(".dgrad.attn_allreduce" in o.name for o in tr)
+    assert not any(".wgrad." in o.name and o.kind == "allreduce"
+                   for o in tr)
+    assert all(o.w_bytes == 0 for o in tr if ".wgrad." in o.name)
+    # inference DP: same op kinds as DP=1, just a smaller local batch
+    inf1 = lm_model_ops(DENSE, layers=2, seq=64, batch=8, dp_shards=1)
+    inf4 = lm_model_ops(DENSE, layers=2, seq=64, batch=8, dp_shards=4)
+    assert [o.name for o in inf1] == [o.name for o in inf4]
+    assert not any(o.name == "grad_allreduce" for o in inf4)
+    assert workload_flops(inf4) < workload_flops(inf1)
+
+
+def test_pod_placement_sets_cross_pod_flags():
+    """PodShape placement: TP innermost, EP middle, DP outermost; a
+    collective crosses pods iff its group span exceeds pod_chips."""
+    from repro.graph.workloads import lm_model_ops
+    from repro.hw.pod import PodShape
+
+    pod = PodShape(dp=4, tp=4, ep=1, pod_chips=8)
+    assert pod.chips == 16 and pod.n_pods == 2
+    assert not pod.crosses_pod("tp")     # span 4 <= 8
+    assert pod.crosses_pod("dp")         # span 16 > 8
+    ops = lm_model_ops(DENSE, layers=1, seq=64, batch=8, phase="train",
+                       dp_shards=4, tp_shards=4, pod_chips=8)
+    by_kind = {}
+    for o in ops:
+        if o.kind == "allreduce":
+            by_kind.setdefault(o.name.split(".")[-1], o)
+    assert not by_kind["attn_allreduce"].cross_pod      # TP in-pod
+    assert by_kind["grad_allreduce"].cross_pod          # DP spans pods
+    # TP=16 on the same 8-chip pods: the TP ring itself leaves the pod
+    wide = lm_model_ops(DENSE, layers=1, seq=64, batch=8, tp_shards=16,
+                        pod_chips=8)
+    assert all(o.cross_pod for o in wide if o.kind == "allreduce")
+    # EP sits between TP and DP
+    ep_ops = lm_model_ops(MOE, layers=1, seq=64, batch=8, tp_shards=2,
+                          ep_shards=8, pod_chips=8)
+    assert all(o.cross_pod for o in ep_ops if o.kind == "alltoall")
+
+
+def test_model_args_validation():
+    from repro.graph.workloads import lm_model_ops
+
+    with pytest.raises(ValueError):      # batch must divide over DP
+        lm_model_ops(DENSE, layers=2, seq=64, batch=3, dp_shards=2)
+    with pytest.raises(ValueError):      # layers >= 1
+        lm_model_ops(DENSE, layers=0, seq=64, batch=2)
+    with pytest.raises(ValueError):      # train needs seq, not kv_len
+        lm_model_ops(DENSE, layers=2, batch=2, phase="train", kv_len=64)
+    with pytest.raises(ValueError):      # bogus phase
+        lm_model_ops(DENSE, layers=2, seq=64, batch=2, phase="serve")
+
+
 def test_decode_flops_scale_with_batch_not_ctx():
     """Decode flops are O(batch) in the projections and O(batch*kv) in
     attention only — doubling kv_len must not double total flops the

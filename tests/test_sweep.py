@@ -219,6 +219,141 @@ def test_lm_grid_phase_validation_errors():
                                      "seq": [1], "batch": [1], "tp": [1]})
 
 
+def test_lm_grid_layers_dp_pod_axes():
+    """The full-model grid axes expand into L<layers>/...dp<dp>pod<pod>
+    names; expansion order is batch, tp, ep, dp, layers, pod."""
+    spec = SweepSpec(name="pod_t",
+                     lm_grid={"arch": "qwen3-32b", "seq": [64],
+                              "batch": [8], "tp": [2], "dp": [1, 2],
+                              "layers": [2, 4], "pod": [2]},
+                     preset="v5e", n_tiles=[2])
+    assert spec.workloads == ["lm/qwen3-32b/L2/s64b8tp2pod2",
+                              "lm/qwen3-32b/L4/s64b8tp2pod2",
+                              "lm/qwen3-32b/L2/s64b8tp2dp2pod2",
+                              "lm/qwen3-32b/L4/s64b8tp2dp2pod2"]
+    # round-trip must not double-expand
+    spec2 = SweepSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert spec2.workloads == spec.workloads
+    # train phase rides the seq axis and the layers requirement
+    tr = SweepSpec(name="tr",
+                   lm_grid={"arch": "qwen3-32b", "phase": "train",
+                            "seq": 64, "batch": 8, "tp": 2, "dp": [2],
+                            "layers": [2]},
+                   preset="v5e", n_tiles=[2])
+    assert tr.workloads == ["lm/qwen3-32b/L2/train/s64b8tp2dp2"]
+
+
+def test_lm_grid_pod_axes_validation_errors():
+    base = {"arch": "qwen3-32b", "seq": [64], "batch": [8], "tp": [1]}
+    with pytest.raises(KeyError):    # dp>1 without a layers axis
+        SweepSpec(name="x", lm_grid={**base, "dp": [2]})
+    with pytest.raises(KeyError):    # pod without a layers axis
+        SweepSpec(name="x", lm_grid={**base, "pod": [8]})
+    with pytest.raises(KeyError):    # train without a layers axis
+        SweepSpec(name="x", lm_grid={**base, "phase": ["train"]})
+    with pytest.raises(ValueError):  # layers must be >= 1
+        SweepSpec(name="x", lm_grid={**base, "layers": [0, 2]})
+    with pytest.raises(KeyError):    # global batch must divide over dp
+        SweepSpec(name="x", lm_grid={**base, "batch": [3],
+                                     "layers": [2], "dp": [2]})
+    with pytest.raises(ValueError):  # bogus phase still rejected
+        SweepSpec(name="x", lm_grid={**base, "phase": ["serve"],
+                                     "layers": [2]})
+
+
+def test_builtin_lm_full_pod_campaign():
+    """Acceptance: lm_full_pod grids full models over layers x dp x tp
+    x batch x phase with >=1e4 analytic points, Pareto-pruned."""
+    spec = load_builtin_spec("lm_full_pod")
+    assert spec.grid_size >= 10_000
+    assert all("/L" in w for w in spec.workloads)
+    assert any("dp4" in w for w in spec.workloads)
+    assert any("/decode/" in w for w in spec.workloads)
+    assert any("tp16" in w for w in spec.workloads)   # TP ring > pod
+    assert all(w.endswith("pod8") for w in spec.workloads)
+    assert spec.description
+    per_cell = spec.grid_size // len(spec.cells())
+    assert spec.refine.max_points < per_cell          # Pareto-pruned
+
+
+def test_model_prescreen_memo_shares_parts_across_layers():
+    """Cells differing only in the layers axis share one body + one
+    head screen via the runner's part memo, and the analytic makespan
+    is exactly linear in the layer count (closed-form replication)."""
+    from repro.sweep.prescreen import prescreen_cell
+
+    spec = SweepSpec(name="memo_t",
+                     lm_grid={"arch": "qwen3-32b", "seq": [64],
+                              "batch": [4], "tp": [1],
+                              "layers": [1, 2, 4]},
+                     preset="v5e", axes={"clock_ghz": [0.6, 0.94]},
+                     n_tiles=[2], refine=RefineSpec(mode="none"))
+    memo = {}
+    screens = {c.workload: prescreen_cell(c, memo=memo)
+               for c in spec.cells()}
+    assert len(memo) == 2            # one body + one head, 3 cells
+    t = {int(w.split("/L")[1].split("/")[0]): s.time_ns
+         for w, s in screens.items()}
+    # f32 XLA makespans: linear to within float32 resolution
+    np.testing.assert_allclose(t[4] - t[2], 2 * (t[2] - t[1]), rtol=1e-5)
+    f = {int(w.split("/L")[1].split("/")[0]): s.total_flops
+         for w, s in screens.items()}
+    assert f[4] - f[2] == pytest.approx(2 * (f[2] - f[1]), rel=1e-12)
+
+
+def test_full_model_campaign_end_to_end():
+    """A tiny full-model pod campaign runs through the fast-path
+    pre-screen AND full-op-list event refinement; DP=2 halves the
+    per-chip batch and cross-pod TP shows up in the analytic time."""
+    spec = SweepSpec(name="pod_e2e",
+                     lm_grid={"arch": "qwen3-32b", "phase": ["decode"],
+                              "kv_len": [64], "batch": [4], "tp": [2],
+                              "dp": [1, 2], "layers": [2], "pod": [2]},
+                     preset="v5e", n_tiles=[2],
+                     refine=RefineSpec(mode="all"))
+    res = run_campaign(spec, workers=0, use_cache=False)
+    assert len(res.refined) == 2
+    by_wl = {r["workload"]: r for r in res.records}
+    full = by_wl["lm/qwen3-32b/L2/decode/kv64b4tp2pod2"]
+    half = by_wl["lm/qwen3-32b/L2/decode/kv64b4tp2dp2pod2"]
+    for r in (full, half):
+        assert r["refined"] and r["time_ns"] > 0 and r["energy_j"] > 0
+        assert r["deviation"] > 0
+    # DP=2 shards the global batch -> strictly less per-chip work
+    assert half["total_flops"] < full["total_flops"]
+    assert half["analytic_time_ns"] < full["analytic_time_ns"]
+
+
+def test_cross_pod_collectives_run_at_dcn_speed():
+    """pod placement end-to-end: with TP=2 on 1-chip pods the TP ring
+    crosses pods, so cutting DCN bandwidth hurts; an in-pod ring
+    ignores it (both analytically and in the compiled CollectiveSpec)."""
+    from repro.core.vectorized import (from_tasks, params_of,
+                                       schedule_many)
+    from repro.graph.compiler import CompileOptions, compile_ops
+    from repro.graph.workloads import resolve_workload
+    from repro.hw.presets import resolve_preset
+
+    cfg = resolve_preset("v5e")
+    slow_dcn = cfg.replace(dcn_gbps=cfg.dcn_gbps / 100)
+    pm = np.stack([params_of(cfg), params_of(slow_dcn)])
+    opts = CompileOptions(n_tiles=2)
+
+    def times(pod):
+        ops = resolve_workload(f"lm/qwen3-32b/L2/s64b4tp2pod{pod}")()
+        cw = compile_ops(ops, cfg, opts)
+        cross = [t.payload.cross_pod for t in cw.tasks
+                 if t.engine == "ici"]
+        mk = schedule_many(from_tasks(cw.tasks), pm)
+        return cross, mk
+
+    cross_in, mk_in = times(2)       # TP ring fits the pod
+    cross_out, mk_out = times(1)     # TP ring spans pods
+    assert not any(cross_in) and all(cross_out) and cross_out
+    assert mk_in[1] == pytest.approx(mk_in[0])        # DCN irrelevant
+    assert mk_out[1] > mk_out[0] * 1.05               # DCN paces it
+
+
 def test_builtin_decode_and_moe_campaigns_load():
     """Acceptance: lm_decode_kv grids >1e4 analytic points over both
     phases; moe_ep_grid grids EP degrees with alltoall collectives."""
