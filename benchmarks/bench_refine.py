@@ -1,0 +1,103 @@
+"""Refinement-throughput trajectory: event engine vs fast engine.
+
+Times ``refine_point`` (compile + simulate + Power-EM, the per-point
+campaign refinement unit) on three workload classes and emits
+``BENCH_refine.json``:
+
+* **small**  — a single-layer LM point (fast engine == exact replay,
+  so the speedup here is the vectorized Power-EM alone),
+* **medium** — a 16-layer full-model pod point,
+* **full**   — ``lm_full_pod``-class 64-layer points (prefill and
+  decode), where steady-state layer extrapolation replays ~4-6 layers
+  and synthesizes the rest.
+
+Each row reports wall seconds, points/sec, the fast/event speedup, and
+the relative ``time_ns`` disagreement (0 when the fast engine replayed;
+float-rounding noise when it extrapolated). No threshold gate — 2-CPU
+CI runners are noisy; CI archives the JSON as an artifact so the
+trajectory is inspectable per commit.
+
+Run:  PYTHONPATH=src python benchmarks/bench_refine.py [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.hw.presets import resolve_preset, to_dict
+from repro.sweep.refine import refine_payload, refine_point
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO, "BENCH_refine.json")
+
+CASES = [
+    ("small:lm_layer", "lm/qwen3-32b/s512b1tp1", 50_000.0),
+    ("medium:lm_full_pod_L16", "lm/qwen3-32b/L16/s1024b8tp4pod8",
+     1_000_000.0),
+    ("full:lm_full_pod_L64_prefill", "lm/qwen3-32b/L64/s1024b8tp4pod8",
+     1_000_000.0),
+    ("full:lm_full_pod_L64_decode",
+     "lm/qwen3-32b/L64/decode/kv4096b16tp4pod8", 1_000_000.0),
+]
+
+
+def bench_point(workload: str, pti_ns: float, engine: str, hw: dict,
+                repeats: int = 1) -> dict:
+    payload = refine_payload(workload=workload, n_tiles=2, hw=hw,
+                             compile_opts={}, pti_ns=pti_ns, temp_c=60.0,
+                             keep_series=False, engine=engine)
+    best = float("inf")
+    rec = None
+    for _ in range(repeats):
+        t0 = time.time()
+        rec = refine_point(payload)
+        best = min(best, time.time() - t0)
+    return {"wall_s": best, "points_per_s": 1.0 / best,
+            "time_ns": rec["time_ns"], "energy_j": rec["energy_j"]}
+
+
+def run(out_path: str = DEFAULT_OUT) -> dict:
+    hw = to_dict(resolve_preset("v5e"))
+    rows = []
+    for label, workload, pti in CASES:
+        ev = bench_point(workload, pti, "event", hw)
+        fa = bench_point(workload, pti, "fast", hw)
+        rows.append({
+            "case": label,
+            "workload": workload,
+            "event_wall_s": ev["wall_s"],
+            "event_points_per_s": ev["points_per_s"],
+            "fast_wall_s": fa["wall_s"],
+            "fast_points_per_s": fa["points_per_s"],
+            "speedup": ev["wall_s"] / fa["wall_s"],
+            "time_ns_rel_diff": abs(fa["time_ns"] / ev["time_ns"] - 1.0)
+            if ev["time_ns"] else 0.0,
+            "energy_rel_diff": abs(fa["energy_j"] / ev["energy_j"] - 1.0)
+            if ev["energy_j"] else 0.0,
+        })
+        r = rows[-1]
+        print(f"{label:>30s}: event {r['event_wall_s']:6.2f}s  fast "
+              f"{r['fast_wall_s']:6.2f}s  speedup {r['speedup']:5.1f}x  "
+              f"time_ns rel diff {r['time_ns_rel_diff']:.2e}")
+    out = {"rows": rows,
+           "full_model_speedup": max(
+               r["speedup"] for r in rows if r["case"].startswith("full"))}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {out_path} (full-model speedup "
+          f"{out['full_model_speedup']:.1f}x)")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

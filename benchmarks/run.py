@@ -7,6 +7,7 @@
   power_profile              Fig 8     per-module transient power (PTI)
   dvfs_sweep                 Fig 9     joint perf/power + DVFS policy
   sim_speed                  §2.3      full-model simulation wall time
+  bench_refine               (ours)    refinement throughput: event vs fast
   roofline                   (ours)    3-term roofline per dry-run cell
 
 Prints a ``name,value,derived`` CSV line per headline metric; artifacts in
@@ -80,6 +81,12 @@ def main() -> int:
     print(csv_row("resnet50_sim_wall_s",
                   next(r["wall_s"] for r in ss["rows"]
                        if r["workload"] == "resnet50"), "paper: minutes"))
+
+    print("\n== bench_refine (event vs fast refinement engine) ==")
+    from . import bench_refine
+    br = bench_refine.run()
+    print(csv_row("refine_full_model_speedup_x", br["full_model_speedup"],
+                  "fast/event on lm_full_pod-class points"))
 
     print("\n== lm_replay (TPU-EM pod replay of compiled programs) ==")
     lr = lm_replay.main()

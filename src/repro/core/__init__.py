@@ -18,7 +18,7 @@ from .engine import (
     URGENT,
 )
 from .resources import Container, PriorityItem, PriorityStore, Resource, Store
-from .trace import ActivitySample, TaskRecord, Tracer
+from .trace import ActivitySample, SampleArrays, TaskRecord, Tracer, pti_bins
 
 __all__ = [
     "AllOf",
@@ -37,6 +37,8 @@ __all__ = [
     "Resource",
     "Store",
     "ActivitySample",
+    "SampleArrays",
     "TaskRecord",
     "Tracer",
+    "pti_bins",
 ]

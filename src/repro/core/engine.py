@@ -292,6 +292,19 @@ class AllOf(Condition):
     def __init__(self, env, events):
         super().__init__(env, lambda evs, n: n >= len(evs), events)
 
+    def _check(self, event: Event) -> None:
+        # specialized: skip the evaluate() indirection and — at
+        # success, when every event has triggered by definition — the
+        # PENDING filter of the generic value-list rebuild
+        if self._value is not PENDING:
+            return
+        self._count += 1
+        if not event._ok:
+            event._defused = True
+            self.fail(event._value)
+        elif self._count >= len(self._events):
+            self.succeed([e._value for e in self._events])
+
 
 class AnyOf(Condition):
     __slots__ = ()
@@ -339,9 +352,10 @@ class Environment:
         return AnyOf(self, events)
 
     # -- scheduling ---------------------------------------------------------
-    def _schedule(self, event: Event, priority: int = NORMAL, delay: float = 0.0):
+    def _schedule(self, event: Event, priority: int = NORMAL,
+                  delay: float = 0.0, _push=heapq.heappush):
         self._eid += 1
-        heapq.heappush(self._queue, (self._now + delay, priority, self._eid, event))
+        _push(self._queue, (self._now + delay, priority, self._eid, event))
 
     def peek(self) -> float:
         """Time of the next scheduled event (inf if none)."""
@@ -375,12 +389,22 @@ class Environment:
                 stop_at = float(until)
                 if stop_at < self._now:
                     raise ValueError(f"until={stop_at} < now={self._now}")
-        while self._queue:
-            if stop_at is not None and self.peek() >= stop_at:
+        # hot loop: step() inlined with the heap bound to locals — the
+        # event kernel spends most of its cycles right here
+        queue = self._queue
+        pop = heapq.heappop
+        while queue:
+            if stop_at is not None and queue[0][0] >= stop_at:
                 self._now = stop_at
                 return None
-            self.step()
-            if stop_ev is not None and stop_ev.processed:
+            t, _, _, event = pop(queue)
+            self._now = t
+            callbacks, event.callbacks = event.callbacks, None
+            for cb in callbacks:
+                cb(event)
+            if not event._ok and not event._defused:
+                raise event._value
+            if stop_ev is not None and stop_ev.callbacks is None:
                 if not stop_ev._ok:
                     raise stop_ev._value
                 return stop_ev._value

@@ -14,9 +14,12 @@ priority) so model behaviour is deterministic.
 from __future__ import annotations
 
 import heapq
+import operator
 from typing import Any, Callable, List, Optional
 
 from .engine import Environment, Event, NORMAL, URGENT
+
+_BY_KEY = operator.attrgetter("key")
 
 __all__ = [
     "Store",
@@ -36,6 +39,9 @@ class _Request(Event):
 
 class Store:
     """Bounded FIFO of Python objects — the paper's hardware FIFO/queue."""
+
+    __slots__ = ("env", "capacity", "name", "items", "_putq", "_getq",
+                 "_seq", "_drainer")
 
     def __init__(self, env: Environment, capacity: float = float("inf"), name: str = ""):
         if capacity <= 0:
@@ -111,6 +117,8 @@ class PriorityItem:
 class PriorityStore(Store):
     """Store whose ``get`` returns the lowest-priority item (router arbiter)."""
 
+    __slots__ = ()
+
     def __init__(self, env: Environment, capacity: float = float("inf"), name: str = ""):
         super().__init__(env, capacity, name)
         self._seq = 0
@@ -141,6 +149,8 @@ class Container:
     ``put(n)`` adds, ``get(n)`` removes; both block until satisfiable.
     Strict FIFO per direction (no barging) for determinism.
     """
+
+    __slots__ = ("env", "capacity", "name", "_level", "_putq", "_getq")
 
     def __init__(
         self,
@@ -210,6 +220,8 @@ class Resource:
         res.release(req)
     """
 
+    __slots__ = ("env", "capacity", "name", "users", "_queue", "_seq")
+
     def __init__(self, env: Environment, capacity: int = 1, name: str = ""):
         if capacity <= 0:
             raise ValueError("capacity must be > 0")
@@ -232,9 +244,15 @@ class Resource:
         # the byte-identical-records backend contract) go
         # nondeterministic with memory layout
         self._seq += 1
-        req.key = (priority, self._seq)
-        self._queue.append(req)
-        self._queue.sort(key=lambda r: r.key)
+        key = req.key = (priority, self._seq)
+        q = self._queue
+        # seq grows monotonically, so appends are already in order
+        # unless this request carries a lower priority value
+        if q and key < q[-1].key:
+            q.append(req)
+            q.sort(key=_BY_KEY)
+        else:
+            q.append(req)
         self._dispatch()
         return req
 

@@ -18,10 +18,12 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
-__all__ = ["ActivitySample", "Tracer", "TaskRecord"]
+import numpy as np
+
+__all__ = ["ActivitySample", "Tracer", "TaskRecord", "SampleArrays"]
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class ActivitySample:
     module: str       # hierarchical name, e.g. "pod0.chip3.mxu0"
     kind: str         # "ops" | "bytes" | "busy"
@@ -34,7 +36,7 @@ class ActivitySample:
         return self.t1 - self.t0
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class TaskRecord:
     """Task-level event record (scheduler view)."""
 
@@ -44,6 +46,38 @@ class TaskRecord:
     t_start: float
     t_end: float
     meta: Tuple[Tuple[str, object], ...] = ()
+    tid: int = -1     # graph.tasks.Task.tid, for array alignment
+
+
+@dataclass
+class SampleArrays:
+    """Column-major view of an activity-sample stream.
+
+    The array twin of ``Tracer.samples``: one row per sample, module
+    names interned to ids, row order preserved (PTI binning accumulates
+    in row order, so loop- and array-based consumers agree bitwise).
+    Produced by ``Tracer.sample_arrays`` after an event simulation, or
+    synthesized directly by ``core.fastsim`` when it extrapolates a
+    steady state instead of replaying it.
+    """
+
+    modules: List[str]          # id -> module name
+    kinds: List[str]            # id -> kind name
+    module_id: np.ndarray       # [M] int32
+    kind_id: np.ndarray         # [M] int32
+    t0: np.ndarray              # [M] float64
+    t1: np.ndarray              # [M] float64
+    amount: np.ndarray          # [M] float64
+
+    def __len__(self) -> int:
+        return int(self.module_id.shape[0])
+
+    def makespan(self) -> float:
+        return float(self.t1.max()) if len(self) else 0.0
+
+    def module_ids_with_prefix(self, prefix: str) -> List[int]:
+        return [i for i, m in enumerate(self.modules)
+                if m.startswith(prefix)]
 
 
 @dataclass
@@ -134,6 +168,87 @@ class Tracer:
     def clear(self) -> None:
         self.samples.clear()
         self.tasks.clear()
+
+    # -- array export (core.fastsim / vectorized Power-EM) --------------------
+    def sample_arrays(self) -> "SampleArrays":
+        """Lower the sample list to ``SampleArrays`` (row order kept)."""
+        mod_ids: Dict[str, int] = {}
+        kind_ids: Dict[str, int] = {}
+        n = len(self.samples)
+        mid = np.empty(n, np.int32)
+        kid = np.empty(n, np.int32)
+        t0 = np.empty(n, np.float64)
+        t1 = np.empty(n, np.float64)
+        amt = np.empty(n, np.float64)
+        for i, s in enumerate(self.samples):
+            mid[i] = mod_ids.setdefault(s.module, len(mod_ids))
+            kid[i] = kind_ids.setdefault(s.kind, len(kind_ids))
+            t0[i] = s.t0
+            t1[i] = s.t1
+            amt[i] = s.amount
+        return SampleArrays(modules=list(mod_ids), kinds=list(kind_ids),
+                            module_id=mid, kind_id=kid, t0=t0, t1=t1,
+                            amount=amt)
+
+    def task_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+        """``(tid, t_enqueue, t_start, t_end)`` arrays in record order."""
+        n = len(self.tasks)
+        tid = np.empty(n, np.int64)
+        enq = np.empty(n, np.float64)
+        st = np.empty(n, np.float64)
+        en = np.empty(n, np.float64)
+        for i, r in enumerate(self.tasks):
+            tid[i], enq[i], st[i], en[i] = r.tid, r.t_enqueue, r.t_start, \
+                r.t_end
+        return tid, enq, st, en
+
+
+def pti_bins(sa: SampleArrays, module_ids: Iterable[int], kind: str,
+             pti: float, t_end: Optional[float] = None) -> np.ndarray:
+    """Array twin of ``Tracer.pti_activity`` — bitwise-identical bins.
+
+    Every sample expands to its covered bins via ``np.repeat`` (so
+    contributions accumulate in sample order, exactly like the Python
+    loop) and lands with one ``np.add.at``. The per-contribution
+    arithmetic replicates the loop's expressions operation for
+    operation, which is what lets the vectorized Power-EM produce
+    byte-identical records.
+    """
+    if pti <= 0:
+        raise ValueError("pti must be > 0")
+    horizon = t_end if t_end is not None else sa.makespan()
+    n = max(1, math.ceil(horizon / pti)) if horizon > 0 else 1
+    bins = np.zeros(n, np.float64)
+    ids = list(module_ids)
+    if not ids or kind not in sa.kinds:
+        return bins
+    sel = np.isin(sa.module_id, np.asarray(ids, np.int32)) & \
+        (sa.kind_id == sa.kinds.index(kind))
+    if not sel.any():
+        return bins
+    t0, t1, amt = sa.t0[sel], sa.t1[sel], sa.amount[sel]
+    dur = t1 - t0
+    zero = dur == 0.0
+    # int(x / pti) truncates the IEEE quotient — replicate exactly
+    b0 = (t0 / pti).astype(np.int64)
+    b1 = np.minimum(np.ceil(t1 / pti).astype(np.int64), n)
+    # zero-duration samples land whole in one clamped bin
+    b0 = np.where(zero, np.minimum(b0, n - 1), b0)
+    nb = np.where(zero, 1, np.maximum(b1 - b0, 0))
+    total = int(nb.sum())
+    if total == 0:
+        return bins
+    row = np.repeat(np.arange(len(nb)), nb)
+    k = np.arange(total) - np.repeat(np.cumsum(nb) - nb, nb)
+    b = b0[row] + k
+    rate = np.where(zero, 0.0, amt / np.where(zero, 1.0, dur))
+    lo = np.maximum(t0[row], b * pti)
+    hi = np.minimum(t1[row], (b + 1) * pti)
+    contrib = np.where(zero[row], amt[row],
+                       np.where(hi > lo, rate[row] * (hi - lo), 0.0))
+    np.add.at(bins, b, contrib)
+    return bins
 
 
 def to_chrome_trace(tracer: "Tracer") -> dict:

@@ -8,6 +8,13 @@ cache-hit events — so backends stay small and interchangeable:
 ``run_campaign(..., backend="inline"|"pool"|"spool")`` is the only
 switch.
 
+Payloads are opaque to backends: the ``engine`` field
+(``"event"|"fast"|"auto"``, routing between the event engine and the
+``core.fastsim`` interval-replay engine) rides inside the payload and
+is resolved by ``refine_point`` wherever the job lands — an external
+spool worker on another host refines with the same engine the campaign
+asked for, and the cache key covers it.
+
 Implementations must be deterministic in *content*: for a given payload
 list every backend produces the same records (the equivalence tests and
 the byte-identical acceptance check rely on it).

@@ -44,7 +44,10 @@ def run_worker(root: str, *, drain: bool = True, poll_s: float = 0.5,
     """Drain (or follow) a spool; returns the number of jobs completed.
 
     ``refine_fn`` is injectable for tests; the default is the real
-    event-engine refinement (``repro.sweep.refine.refine_point``).
+    refinement entrypoint (``repro.sweep.refine.refine_point``), which
+    honors each payload's ``engine`` field — jobs spooled by a
+    ``refine.engine="fast"`` campaign run on the fastsim engine here
+    too, whichever host drains them.
     """
     if refine_fn is None:
         from ..sweep.refine import refine_point

@@ -31,8 +31,6 @@ from .workloads import Op
 
 __all__ = ["CompileOptions", "compile_ops", "CompiledWorkload"]
 
-_bid = itertools.count(1)
-
 # op kind -> hw.ici.CollectiveSpec op name
 _COLLECTIVE_OPS = {"allreduce": "all-reduce", "alltoall": "all-to-all"}
 
@@ -52,13 +50,21 @@ class CompiledWorkload:
     tasks: List[Task]
     total_flops: float
     hbm_bytes: float
-    n_barriers: int
+    n_barriers: int   # dense per-compile count: ids are exactly 0..n-1
     spilled_layers: int
 
 
 def compile_ops(ops: Sequence[Op], cfg: HwConfig,
                 opts: Optional[CompileOptions] = None) -> CompiledWorkload:
+    """Compile an op list into a barrier-synchronized task graph.
+
+    Barrier ids are **per-compile and dense from 0** (``n_barriers`` is
+    the exact count), so array consumers (``core.fastsim``) can index
+    barriers directly; ``graph.stackem`` re-instances templates with its
+    own remapping, and every other caller runs one compile per System.
+    """
     opts = opts or CompileOptions()
+    _bid = itertools.count(0)
     nt = max(opts.n_tiles, 1)
     tasks: List[Task] = []
     hbm_addr = 0
@@ -189,6 +195,11 @@ def compile_ops(ops: Sequence[Op], cfg: HwConfig,
             hbm_bytes += out_bytes * (cfg.dma_compression_ratio
                                       if opts.compression else 1.0)
 
+    n_barriers = next(_bid)
+    used = {b for t in tasks for b in t.signals}
+    used.update(b for t in tasks for b, _ in t.waits)
+    assert used <= set(range(n_barriers)), \
+        f"barrier ids not dense: {sorted(used)} vs n={n_barriers}"
     return CompiledWorkload(tasks=tasks, total_flops=total_flops,
-                            hbm_bytes=hbm_bytes, n_barriers=next(_bid),
+                            hbm_bytes=hbm_bytes, n_barriers=n_barriers,
                             spilled_layers=spilled)

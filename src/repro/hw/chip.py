@@ -111,7 +111,7 @@ class System:
             self.tracer.emit_task(TaskRecord(
                 task=task.name or str(task.tid), engine=engine,
                 t_enqueue=getattr(task, "_enqueue_time", t_start),
-                t_start=t_start, t_end=self.env.now))
+                t_start=t_start, t_end=self.env.now, tid=task.tid))
             task._done_event.succeed()
 
     # ------------------------------------------------------------------

@@ -63,7 +63,7 @@ class VMem:
         return self.capacity.level
 
 
-@dataclass
+@dataclass(slots=True)
 class _BankState:
     open_row: int = -1
 

@@ -16,9 +16,12 @@ from this.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from ..core import Tracer
+import numpy as np
+
+from ..core import SampleArrays, Tracer
+from ..core.trace import pti_bins
 from ..hw.presets import HwConfig
 from .characterization import DEFAULT_CHARS, NOMINAL_TEMP_C, PowerChar
 
@@ -170,39 +173,52 @@ class PowerEM:
         self.temp = temp_c
         self.tree = tree or build_power_tree(cfg, n_tiles)
 
-    def analyze(self, tracer: Tracer, *, pti_ns: float = 10_000.0,
+    def analyze(self, tracer: Union[Tracer, SampleArrays], *,
+                pti_ns: float = 10_000.0,
                 t_end_ns: Optional[float] = None,
                 power_gating: bool = False,
                 gate_after_idle_ptis: int = 2,
                 gate_residual: float = 0.3) -> PowerReport:
-        """Per-PTI joint analysis.
+        """Per-PTI joint analysis, vectorized over interval arrays.
+
+        Accepts either a live ``Tracer`` or its ``SampleArrays`` export
+        (the form ``core.fastsim`` synthesizes). Activity is binned with
+        one ``np.add.at`` per node and the affine per-node power curve is
+        applied array-wise — arithmetic replicates the reference loop
+        operation for operation, so records are byte-identical to the
+        pre-vectorization implementation (locked by a test).
 
         ``power_gating`` implements the paper's §6.2 future work (active
         power-state management): a module idle for ``gate_after_idle_ptis``
         consecutive PTIs drops to a gated state — idle dynamic power off,
         leakage scaled by ``gate_residual`` (retention rails). Wake is
-        charged one PTI of full idle power (state-transition cost).
+        charged one PTI of full idle power (state-transition cost); its
+        sequential idle-run state keeps that path on the scalar loop.
         """
-        horizon = t_end_ns if t_end_ns is not None else tracer.makespan()
+        sa = tracer if isinstance(tracer, SampleArrays) \
+            else tracer.sample_arrays()
+        horizon = t_end_ns if t_end_ns is not None else sa.makespan()
         series: Dict[str, List[float]] = {}
         util: Dict[str, List[float]] = {}
         for node in self.tree.walk():
             if node.scale <= 0.0 and node.children:
                 continue  # pure grouping node
-            acts = tracer.pti_activity(node.module_prefix,
-                                       node.activity_kind, pti_ns,
-                                       t_end=horizon)
+            acts = pti_bins(sa, sa.module_ids_with_prefix(node.module_prefix),
+                            node.activity_kind, pti_ns, t_end=horizon)
             max_per_pti = node.max_rate_per_ns * pti_ns
             # frequency scaling moves compute capacity with F
             if node.activity_kind == "ops":
                 max_per_pti *= self.freq / self.cfg.clock_ghz
-            us, ws = [], []
-            idle_run = 0
-            gated = False
-            for a in acts:
-                u = min(a / max_per_pti, 1.0) if max_per_pti > 0 else 0.0
-                us.append(u)
-                if power_gating:
+            if max_per_pti > 0:
+                u_arr = np.minimum(acts / max_per_pti, 1.0)
+            else:
+                u_arr = np.zeros_like(acts)
+            us = u_arr.tolist()
+            if power_gating:
+                ws = []
+                idle_run = 0
+                gated = False
+                for u in us:
                     if u <= 0.0:
                         idle_run += 1
                     else:
@@ -217,8 +233,17 @@ class PowerEM:
                         ws.append(node.scale * gate_residual
                                   * node.char.leakage_w(self.temp, v))
                         continue
-                ws.append(node.scale * node.char.total_w(
-                    self.freq, u, self.temp))
+                    ws.append(node.scale * node.char.total_w(
+                        self.freq, u, self.temp))
+            else:
+                # affine per-node power: same expression tree as
+                # PowerChar.total_w, applied array-wise (bitwise-equal)
+                ch = node.char
+                v = ch.vf.f2v(self.freq, self.temp)
+                leak = ch.leakage_w(self.temp, v)
+                c_nf = ch.c_dyn_idle_nf + ch.c_dyn_active_nf * \
+                    np.minimum(np.maximum(u_arr, 0.0), 1.0)
+                ws = (node.scale * (leak + c_nf * self.freq * v * v)).tolist()
             series[node.name] = ws
             util[node.name] = us
         return PowerReport(pti_ns=pti_ns, t_end_ns=horizon, series=series,

@@ -14,12 +14,17 @@ sweep script into a declarative **campaign**:
 3. **Select** (``pareto.py``) — the Pareto-interesting points (time x
    energy front, plus extremes) are chosen for refinement.
 4. **Refine** (``refine.py``/``runner.py``) — only the selected points
-   re-run on the ground-truth event engine + Power-EM, executed through
-   a pluggable ``repro.exec`` backend (inline / local process pool /
-   resumable filesystem job spool) behind a content-hashed on-disk
-   result cache (``cache.py``) so repeated — and interrupted —
-   campaigns are incremental. A per-point JSONL journal records status,
-   wall time, worker id, and cache-hit counters.
+   re-run in detail (Power-EM included) on the refinement engine the
+   spec picks: the ground-truth event engine, or ``core.fastsim``'s
+   interval replay with steady-state layer extrapolation
+   (``refine.engine="fast"|"auto"`` — >=10x points/sec on full-model
+   LM points, byte-identical records whenever it replays). Execution
+   goes through a pluggable ``repro.exec`` backend (inline / local
+   process pool / resumable filesystem job spool) behind a
+   content-hashed on-disk result cache (``cache.py``) so repeated —
+   and interrupted — campaigns are incremental. A per-point JSONL
+   journal records status, wall time, worker id, and cache-hit
+   counters.
 
 CLI: ``python -m repro.sweep run <spec.json | builtin-name>
 [--backend inline|pool|spool]``; workers attach with

@@ -4,6 +4,7 @@
   python -m repro.sweep list
   python -m repro.sweep show <builtin-name>
   python -m repro.sweep cache [dir] [--prune]
+  python -m repro.sweep crosscheck <workload> [--n-tiles N] [--preset P]
 
 ``run`` prints a per-phase progress log, a ``name,value`` CSV summary
 block, and writes the campaign record JSON (default:
@@ -52,6 +53,8 @@ def cmd_run(args: argparse.Namespace) -> int:
         return 2
     if args.refine_mode:
         spec.refine.mode = args.refine_mode
+    if args.engine:
+        spec.refine.engine = args.engine
     cache_dir = None
     if not args.no_cache:
         cache_dir = args.cache_dir or spec.cache_dir or DEFAULT_CACHE_DIR
@@ -132,6 +135,41 @@ def cmd_cache(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_crosscheck(args: argparse.Namespace) -> int:
+    """Run one point on BOTH refinement engines and print the deltas —
+    the operational form of the fast engine's exactness contract."""
+    from ..hw.presets import resolve_preset, to_dict
+    from .refine import crosscheck_point, refine_payload
+
+    try:
+        # user-input resolution only: a deep KeyError inside the
+        # simulation must surface as a traceback, not a usage error
+        hw = to_dict(resolve_preset(args.preset))
+        payload = refine_payload(
+            workload=args.workload, n_tiles=args.n_tiles, hw=hw,
+            compile_opts={}, pti_ns=args.pti_ns, temp_c=60.0,
+            keep_series=False, engine="fast")
+        from ..graph.workloads import resolve_workload
+        resolve_workload(args.workload)
+    except KeyError as e:
+        print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+        return 2
+    out = crosscheck_point(payload)
+    print(f"workload,{out['workload']},")
+    print(f"extrapolated,{out['extrapolated']},"
+          f"{out['replayed_tasks']}/{out['n_tasks']} tasks replayed")
+    print(f"max_interval_diff_ns,{out['max_interval_diff_ns']:.6g},")
+    print(f"makespan_diff_ns,{out['makespan_diff_ns']:.6g},")
+    print(f"analytic_makespan_ns,{out['analytic_makespan_ns']:.6g},"
+          f"list_schedule estimate, event/analytic "
+          f"{out['analytic_ratio']:.3g}")
+    worst = max(out["record_rel_diff"].items(), key=lambda kv: kv[1])
+    print(f"worst_record_rel_diff,{worst[1]:.6g},{worst[0]}")
+    for k, v in sorted(out["detail"].items()):
+        print(f"detail.{k},{v},")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sweep",
                                  description=__doc__)
@@ -160,6 +198,11 @@ def main(argv=None) -> int:
     rp.add_argument("--out", default=None, help="campaign JSON output path")
     rp.add_argument("--refine-mode", choices=("pareto", "all", "none"),
                     default=None, help="override the spec's refine mode")
+    rp.add_argument("--engine", choices=("event", "fast", "auto"),
+                    default=None,
+                    help="override the spec's refine engine (fast = "
+                         "core.fastsim interval replay + steady-state "
+                         "layer extrapolation)")
     rp.set_defaults(fn=cmd_run)
 
     lp = sub.add_parser("list", help="list builtin campaign specs")
@@ -175,6 +218,16 @@ def main(argv=None) -> int:
     cp.add_argument("--prune", action="store_true",
                     help="delete entries from other schema generations")
     cp.set_defaults(fn=cmd_cache)
+
+    xp = sub.add_parser("crosscheck",
+                        help="compare fast vs event refinement engines "
+                             "on one workload point")
+    xp.add_argument("workload", help="workload name, e.g. "
+                    "lm/qwen3-32b/L32/s1024b8tp4pod8")
+    xp.add_argument("--n-tiles", type=int, default=2)
+    xp.add_argument("--preset", default="v5e")
+    xp.add_argument("--pti-ns", type=float, default=100_000.0)
+    xp.set_defaults(fn=cmd_crosscheck)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -3,42 +3,114 @@
 Kept in its own module with **no jax imports anywhere on its import
 path** so parallel refinement workers (``spawn`` context) start in
 milliseconds instead of re-initializing XLA per process.
+
+Since ISSUE 5 a refinement payload carries an ``engine`` field:
+
+* ``"event"`` — the classic path: compile, walk the full task list on
+  the generator-driven event engine, Power-EM the tracer.
+* ``"fast"``  — ``core.fastsim``: exact interval replay with
+  steady-state layer extrapolation for full-model LM workloads (replay
+  a reduced-layer twin, verify periodicity, synthesize the rest in
+  arrays), exact full replay otherwise. Records are byte-identical to
+  ``"event"`` whenever fastsim replays (it *is* the event engine then);
+  extrapolated points agree to float-rounding noise.
+* ``"auto"``  — ``"fast"`` for layered full-model workloads with at
+  least ``fastsim.FAST_MIN_LAYERS`` layers (where extrapolation pays),
+  ``"event"`` for everything else.
+
+The field is part of the payload, so it travels through every
+``repro.exec`` backend unchanged and lands in the result-cache content
+key — switching engines never serves a stale record.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, List, Tuple
 
-from ..graph.compiler import CompileOptions, compile_ops
-from ..graph.workloads import resolve_workload
+from ..core import fastsim
+from ..graph.compiler import CompileOptions, CompiledWorkload, compile_ops
+from ..graph.workloads import lm_workload_name, parse_lm_name, \
+    resolve_workload
 from ..hw.chip import System
-from ..hw.presets import from_dict
+from ..hw.presets import HwConfig, from_dict
 from ..power.powerem import PowerEM
 
-__all__ = ["refine_point", "refine_payload"]
+__all__ = ["refine_point", "refine_payload", "resolve_engine",
+           "crosscheck_point", "ENGINES"]
+
+ENGINES = ("event", "fast", "auto")
 
 
 def refine_payload(*, workload: str, n_tiles: int, hw: Dict[str, Any],
                    compile_opts: Dict[str, Any], pti_ns: float,
-                   temp_c: float, keep_series: bool) -> Dict[str, Any]:
+                   temp_c: float, keep_series: bool,
+                   engine: str = "event") -> Dict[str, Any]:
     """The cache-keyed, process-picklable input of one refinement."""
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     return {"workload": workload, "n_tiles": n_tiles, "hw": hw,
             "compile_opts": compile_opts, "pti_ns": pti_ns,
-            "temp_c": temp_c, "keep_series": keep_series}
+            "temp_c": temp_c, "keep_series": keep_series, "engine": engine}
 
 
-def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
-    """Compile + event-simulate + Power-EM one hardware point."""
+def resolve_engine(engine: str, workload: str) -> str:
+    """Collapse ``auto`` to a concrete engine for one workload."""
+    if engine != "auto":
+        return engine
+    try:
+        p = parse_lm_name(workload)
+    except KeyError:
+        p = None
+    if p and p["layers"] and p["layers"] >= fastsim.FAST_MIN_LAYERS:
+        return "fast"
+    return "event"
+
+
+def _compile(payload: Dict[str, Any]) -> Tuple[HwConfig, int,
+                                               CompiledWorkload]:
     cfg = from_dict(payload["hw"])
     nt = payload["n_tiles"]
     ops = resolve_workload(payload["workload"])()
     cw = compile_ops(ops, cfg,
                      CompileOptions(n_tiles=nt, **payload["compile_opts"]))
-    sysm = System(cfg, n_tiles=nt)
-    rep = sysm.run_workload(cw.tasks)
-    pem = PowerEM(cfg, n_tiles=nt, freq_ghz=cfg.clock_ghz,
-                  temp_c=payload["temp_c"])
-    prep = pem.analyze(sysm.tracer, pti_ns=payload["pti_ns"])
-    t = rep.makespan_ns
+    return cfg, nt, cw
+
+
+def _reduced_workloads(workload: str) -> List[str]:
+    """Reduced-layer replay-twin names, shallow first (the warmup
+    transient varies with phase AND problem size, so a shallow attempt
+    that fails its lock-in check retries deeper); empty when the
+    workload is not an extrapolation candidate."""
+    try:
+        p = parse_lm_name(workload)
+    except KeyError:
+        return []
+    if not p or not p["layers"] or p["layers"] < fastsim.FAST_MIN_LAYERS:
+        return []
+    depths = [fastsim.FAST_REPLAY_LAYERS_BY_PHASE.get(
+        p["phase"], fastsim.FAST_REPLAY_LAYERS)]
+    if fastsim.FAST_REPLAY_LAYERS not in depths:
+        depths.append(fastsim.FAST_REPLAY_LAYERS)
+    return [lm_workload_name(
+        p["arch"], seq=p["seq"], batch=p["batch"], tp=p["tp"],
+        phase=p["phase"], kv_len=p["kv_len"], ep=p["ep"],
+        layers=r, dp=p["dp"], pod=p["pod"])
+        for r in depths if r < p["layers"]]
+
+
+def _simulate_fast(payload: Dict[str, Any]) -> Tuple[
+        HwConfig, int, CompiledWorkload, "fastsim.FastRun"]:
+    cfg, nt, cw = _compile(payload)
+    opts = CompileOptions(n_tiles=nt, **payload["compile_opts"])
+    reduced = [compile_ops(resolve_workload(n)(), cfg, opts)
+               for n in _reduced_workloads(payload["workload"])]
+    run = fastsim.simulate_fast(cw, cfg, n_tiles=nt, reduced=reduced)
+    return cfg, nt, cw, run
+
+
+def _record(cfg: HwConfig, nt: int, cw: CompiledWorkload, *,
+            makespan_ns: float, n_tasks: int, prep, pem,
+            payload: Dict[str, Any]) -> Dict[str, Any]:
+    t = makespan_ns
     e = prep.energy_j()
     rec = {
         "time_ns": t,
@@ -48,7 +120,7 @@ def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
         "energy_j": e,
         "inf_per_j": (1.0 / e) if e > 0 else 0.0,
         "volt": pem.tree.char.vf.f2v(cfg.clock_ghz, payload["temp_c"]),
-        "n_tasks": rep.n_tasks,
+        "n_tasks": n_tasks,
         "spilled_layers": cw.spilled_layers,
         "total_flops": cw.total_flops,
     }
@@ -56,3 +128,82 @@ def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
         rec["series_w"] = prep.series
         rec["pti_ns"] = prep.pti_ns
     return rec
+
+
+def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Compile + simulate + Power-EM one hardware point.
+
+    ``payload["engine"]`` routes between the event engine and the
+    ``core.fastsim`` interval-replay engine (see module docstring).
+    """
+    engine = resolve_engine(payload.get("engine", "event"),
+                            payload["workload"])
+    cfg = from_dict(payload["hw"])
+    nt = payload["n_tiles"]
+    pem = PowerEM(cfg, n_tiles=nt, freq_ghz=cfg.clock_ghz,
+                  temp_c=payload["temp_c"])
+    if engine == "fast":
+        cfg, nt, cw, run = _simulate_fast(payload)
+        prep = pem.analyze(run.samples, pti_ns=payload["pti_ns"])
+        return _record(cfg, nt, cw, makespan_ns=run.makespan_ns,
+                       n_tasks=len(cw.tasks), prep=prep, pem=pem,
+                       payload=payload)
+    cfg, nt, cw = _compile(payload)
+    sysm = System(cfg, n_tiles=nt)
+    rep = sysm.run_workload(cw.tasks)
+    prep = pem.analyze(sysm.tracer, pti_ns=payload["pti_ns"])
+    return _record(cfg, nt, cw, makespan_ns=rep.makespan_ns,
+                   n_tasks=rep.n_tasks, prep=prep, pem=pem, payload=payload)
+
+
+def crosscheck_point(payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Run one point on BOTH engines and quantify the disagreement.
+
+    Returns per-task interval deltas and record-level deltas; the fast
+    engine's contract is ``max_interval_diff_ns == 0.0`` whenever it
+    replayed (``extrapolated=False``) and float-rounding noise
+    otherwise. Used by tests and ``python -m repro.sweep crosscheck``.
+
+    Each engine simulates exactly once: records are assembled from the
+    already-computed interval/sample arrays (bit-identical to what
+    ``refine_point`` would produce — the event path's Power-EM consumes
+    the same ``SampleArrays`` export). Also reports the array-lowered
+    ``list_schedule`` relaxation as the analytic estimate.
+    """
+    import numpy as np
+
+    cfg, nt, cw, run = _simulate_fast(payload)
+    if run.extrapolated:
+        ev_start, ev_end, ev_sa = fastsim.replay_intervals(cw.tasks, cfg,
+                                                           n_tiles=nt)
+    else:
+        # the fallback already IS a full event replay of these tasks
+        ev_start, ev_end, ev_sa = run.start, run.end, run.samples
+    dstart = float(np.abs(run.start - ev_start).max(initial=0.0))
+    dend = float(np.abs(run.end - ev_end).max(initial=0.0))
+    pem = PowerEM(cfg, n_tiles=nt, freq_ghz=cfg.clock_ghz,
+                  temp_c=payload["temp_c"])
+    rec_fa = _record(cfg, nt, cw, makespan_ns=run.makespan_ns,
+                     n_tasks=len(cw.tasks), pem=pem, payload=payload,
+                     prep=pem.analyze(run.samples,
+                                      pti_ns=payload["pti_ns"]))
+    rec_ev = _record(cfg, nt, cw, makespan_ns=ev_sa.makespan(),
+                     n_tasks=len(cw.tasks), pem=pem, payload=payload,
+                     prep=pem.analyze(ev_sa, pti_ns=payload["pti_ns"]))
+    num_keys = [k for k, v in rec_ev.items() if isinstance(v, float)]
+    rec_diff = {k: abs(rec_fa[k] - rec_ev[k]) /
+                (abs(rec_ev[k]) if rec_ev[k] else 1.0) for k in num_keys}
+    _, _, analytic_mk = fastsim.list_schedule(fastsim.lower(cw, cfg))
+    return {
+        "workload": payload["workload"],
+        "extrapolated": run.extrapolated,
+        "replayed_tasks": run.replayed_tasks,
+        "n_tasks": len(cw.tasks),
+        "max_interval_diff_ns": max(dstart, dend),
+        "makespan_diff_ns": abs(run.makespan_ns - ev_sa.makespan()),
+        "record_rel_diff": rec_diff,
+        "analytic_makespan_ns": analytic_mk,
+        "analytic_ratio": (ev_sa.makespan() / analytic_mk
+                           if analytic_mk > 0 else 0.0),
+        "detail": run.detail,
+    }

@@ -199,7 +199,8 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
                     workload=pt.workload, n_tiles=pt.n_tiles,
                     hw=to_dict(cfg), compile_opts=dict(spec.compile_opts),
                     pti_ns=spec.refine.pti_ns, temp_c=spec.refine.temp_c,
-                    keep_series=spec.refine.keep_series)
+                    keep_series=spec.refine.keep_series,
+                    engine=spec.refine.engine)
                 todo.append(payload)
                 todo_idx.append(len(records))
             records.append(rec)

@@ -85,18 +85,33 @@ BUILTIN_SPEC_DIR = os.path.join(
 
 @dataclass
 class RefineSpec:
-    """How the event engine refines the pre-screened grid."""
+    """How the pre-screened grid is refined (engine + budget + Power-EM).
+
+    ``engine`` picks the refinement simulator per point: ``"event"``
+    (the generator-driven event engine — ground truth), ``"fast"``
+    (``core.fastsim`` interval replay with steady-state layer
+    extrapolation; byte-identical to ``event`` whenever it replays) or
+    ``"auto"`` (``fast`` for big layered full models, ``event``
+    otherwise). The default honors ``REPRO_REFINE_ENGINE`` so CI can
+    run whole campaign lanes on either engine; the value is part of
+    every refinement payload and therefore of the result-cache key.
+    """
 
     mode: str = "pareto"          # pareto | all | none
     max_points: int = 16          # refinement budget per structural cell
     pti_ns: float = 10_000.0      # Power-EM trace interval
     temp_c: float = NOMINAL_TEMP_C
     keep_series: bool = False     # keep per-module PTI power series
+    engine: str = field(default_factory=lambda: os.environ.get(
+        "REPRO_REFINE_ENGINE", "event"))   # event | fast | auto
 
     def __post_init__(self):
         if self.mode not in ("pareto", "all", "none"):
             raise ValueError(f"refine.mode must be pareto|all|none, "
                              f"got {self.mode!r}")
+        if self.engine not in ("event", "fast", "auto"):
+            raise ValueError(f"refine.engine must be event|fast|auto, "
+                             f"got {self.engine!r}")
 
 
 @dataclass

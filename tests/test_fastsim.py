@@ -1,0 +1,261 @@
+"""Fast refinement engine (``core.fastsim``) — exactness lockdown (ISSUE 5).
+
+Four families:
+
+1. **Replay exactness** — on randomized op lists (all op kinds,
+   collectives with cross-pod placement, spill forced on/off, prefetch
+   and compression toggled) the fast engine's full-replay path yields
+   *bitwise* the event engine's makespan, per-task intervals, and
+   Power-EM energy. The vectorized PTI binning is additionally pinned
+   bitwise against the scalar ``Tracer.pti_activity`` reference.
+2. **Steady-state extrapolation** — layered full-model points (all
+   three phases, TP/DP/pod placements) extrapolate (no silent
+   fallback) and agree with the full event simulation to float-rounding
+   noise: intervals within 1e-3 ns, records within 1e-9 relative.
+3. **Array lowering** — dense per-compile barrier ids, and the
+   ``list_schedule`` relaxation respects the barrier DAG + per-engine
+   FIFO order.
+4. **Routing** — ``engine`` payload plumbing: auto resolution, cache-key
+   separation, spec validation, byte-identical fast-vs-event records on
+   replayed workloads end to end through ``refine_point``.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fastsim
+from repro.core.trace import pti_bins
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import Op, resolve_workload
+from repro.hw.chip import System
+from repro.hw.presets import paper_skew, resolve_preset, to_dict
+from repro.power.powerem import PowerEM, build_power_tree
+from repro.sweep.cache import content_key
+from repro.sweep.refine import (crosscheck_point, refine_payload,
+                                refine_point, resolve_engine)
+from repro.sweep.spec import RefineSpec
+
+CFG = paper_skew()
+V5E = resolve_preset("v5e")
+
+
+# -- random op lists --------------------------------------------------------
+
+def _op(i, kind, size, group, cross_pod, stream):
+    if kind == "matmul":
+        return Op(f"op{i}", "matmul", m=size, n=64, k=64,
+                  in_bytes=size * 64, out_bytes=size * 64,
+                  w_bytes=64 * 64, stream=stream)
+    if kind == "eltwise":
+        return Op(f"op{i}", "eltwise", elems=size * 64, vec_kind="add",
+                  in_bytes=size * 64, out_bytes=size * 64, stream=stream)
+    return Op(f"op{i}", kind, in_bytes=size * 256, out_bytes=size * 256,
+              group=group, cross_pod=cross_pod)
+
+
+op_lists = st.lists(
+    st.tuples(st.sampled_from(["matmul", "eltwise", "allreduce",
+                               "alltoall"]),
+              st.sampled_from([8, 96, 700]),       # fits-VMEM .. spills
+              st.sampled_from([2, 4]),             # collective group
+              st.booleans(),                       # cross_pod
+              st.booleans()),                      # force streaming
+    min_size=1, max_size=8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(op_lists,
+       st.sampled_from([1, 2]),                    # n_tiles
+       st.sampled_from([0.02, 0.5]),               # resident_fraction
+       st.booleans(),                              # compression
+       st.booleans())                              # weight_prefetch
+def test_replay_bitwise_equals_event_engine(descr, nt, resident, comp,
+                                            prefetch):
+    """Full-replay fast path == event engine, bit for bit: intervals,
+    makespan, per-PTI bins, and Power-EM series."""
+    ops = [_op(i, *d) for i, d in enumerate(descr)]
+    opts = CompileOptions(n_tiles=nt, resident_fraction=resident,
+                          compression=comp, weight_prefetch=prefetch)
+    cw = compile_ops(ops, CFG, opts)
+
+    # reference: raw event engine
+    sysm = System(CFG, n_tiles=nt)
+    rep = sysm.run_workload(cw.tasks)
+    recs = {}
+    for r in sysm.tracer.tasks:
+        recs[r.tid] = r
+
+    # fast engine (no reduced twin -> exact full replay)
+    run = fastsim.simulate_fast(cw, CFG, n_tiles=nt)
+    assert not run.extrapolated
+    assert run.makespan_ns == rep.makespan_ns
+    for i, t in enumerate(cw.tasks):
+        assert run.start[i] == recs[t.tid].t_start
+        assert run.end[i] == recs[t.tid].t_end
+
+    # vectorized PTI binning == the scalar Tracer reference, bitwise
+    sa = run.samples
+    pti = 500.0
+    horizon = rep.makespan_ns
+    for node in build_power_tree(CFG, nt).walk():
+        ref = sysm.tracer.pti_activity(node.module_prefix,
+                                       node.activity_kind, pti,
+                                       t_end=horizon)
+        vec = pti_bins(sa, sa.module_ids_with_prefix(node.module_prefix),
+                       node.activity_kind, pti, t_end=horizon)
+        assert ref == vec.tolist()
+
+    # vectorized Power-EM over the arrays == Power-EM over the tracer
+    pem = PowerEM(CFG, n_tiles=nt)
+    a = pem.analyze(sysm.tracer, pti_ns=pti)
+    b = pem.analyze(sa, pti_ns=pti)
+    assert a.series == b.series and a.util == b.util
+    assert a.energy_j() == b.energy_j()
+
+
+def test_powerem_gating_path_still_works():
+    ops = [_op(0, "matmul", 96, 2, False, False),
+           _op(1, "eltwise", 96, 2, False, False)]
+    cw = compile_ops(ops, CFG, CompileOptions(n_tiles=2))
+    sysm = System(CFG, n_tiles=2)
+    sysm.run_workload(cw.tasks)
+    pem = PowerEM(CFG, n_tiles=2)
+    plain = pem.analyze(sysm.tracer, pti_ns=200.0)
+    gated = pem.analyze(sysm.tracer, pti_ns=200.0, power_gating=True)
+    assert sum(gated.total_series) <= sum(plain.total_series)
+
+
+# -- steady-state extrapolation --------------------------------------------
+
+EXTRAP_POINTS = [
+    "lm/qwen3-32b/L8/s64b2tp2pod2",
+    "lm/qwen3-32b/L8/decode/kv128b2tp2pod2",
+    "lm/qwen3-32b/L8/train/s64b2tp2dp2pod2",   # patched grad all-reduce
+]
+
+
+@pytest.mark.parametrize("workload", EXTRAP_POINTS)
+def test_extrapolation_matches_event_engine(workload):
+    """All three phases lock in (no silent fallback) and agree with the
+    full event simulation to float-rounding noise."""
+    out = crosscheck_point(refine_payload(
+        workload=workload, n_tiles=2, hw=to_dict(V5E), compile_opts={},
+        pti_ns=50_000.0, temp_c=60.0, keep_series=False, engine="fast"))
+    assert out["extrapolated"], out["detail"]
+    assert out["replayed_tasks"] < out["n_tasks"]
+    assert out["max_interval_diff_ns"] < 1e-3
+    assert out["makespan_diff_ns"] < 1e-3
+    assert max(out["record_rel_diff"].values()) < 1e-9
+    if "train" in workload:
+        assert out["detail"]["patched_tail"] == 1
+
+
+def test_fallback_is_exact_when_structure_mismatches():
+    """A reduced twin that doesn't match the full model's block
+    structure must fall back to full replay — still bit-exact."""
+    cfg = V5E
+    full = compile_ops(resolve_workload("lm/qwen3-32b/L8/s64b2tp2pod2")(),
+                      cfg, CompileOptions(n_tiles=2))
+    other = compile_ops(
+        resolve_workload("lm/qwen3-32b/L4/decode/kv64b2tp2pod2")(),
+        cfg, CompileOptions(n_tiles=2))
+    run = fastsim.simulate_fast(full, cfg, n_tiles=2, reduced=[other])
+    assert not run.extrapolated
+    assert "fallback" in run.detail
+    _, _, sa = fastsim.replay_intervals(full.tasks, cfg, n_tiles=2)
+    assert run.makespan_ns == sa.makespan()
+
+
+def test_fast_records_byte_equal_event_on_replayed_workloads():
+    """End-to-end: a non-layered workload refined with engine="fast"
+    produces the *identical* record dict as engine="event"."""
+    base = dict(workload="lm/qwen3-32b/decode/kv64b2tp2", n_tiles=2,
+                hw=to_dict(V5E), compile_opts={}, pti_ns=50_000.0,
+                temp_c=60.0, keep_series=True)
+    rec_ev = refine_point(refine_payload(**base, engine="event"))
+    rec_fa = refine_point(refine_payload(**base, engine="fast"))
+    assert rec_ev == rec_fa
+
+
+# -- array lowering + list schedule ----------------------------------------
+
+def test_compiler_barrier_ids_dense_and_per_compile():
+    ops = [_op(i, k, 96, 2, False, False)
+           for i, k in enumerate(["matmul", "allreduce", "eltwise"])]
+    a = compile_ops(ops, CFG, CompileOptions(n_tiles=2))
+    b = compile_ops(ops, CFG, CompileOptions(n_tiles=2))
+    assert a.n_barriers == b.n_barriers      # no process-global watermark
+    for cw in (a, b):
+        used = {bid for t in cw.tasks for bid in t.signals}
+        used |= {bid for t in cw.tasks for bid, _ in t.waits}
+        assert used == set(range(cw.n_barriers))
+    wa = [(t.waits, t.signals) for t in a.tasks]
+    wb = [(t.waits, t.signals) for t in b.tasks]
+    assert wa == wb                          # ids independent of history
+
+
+def test_list_schedule_respects_dag_and_fifo():
+    ops = [_op(i, k, s, 2, False, False) for i, (k, s) in enumerate(
+        [("matmul", 96), ("eltwise", 96), ("allreduce", 8),
+         ("matmul", 700)])]
+    cw = compile_ops(ops, CFG, CompileOptions(n_tiles=2))
+    table = fastsim.lower(cw, CFG)
+    start, end, mk = fastsim.list_schedule(table)
+    assert mk == end.max()
+    # per-engine FIFO: tasks on one engine never overlap, in order
+    for e in range(len(table.engines)):
+        idx = np.nonzero(table.engine_id == e)[0]
+        for a, b in zip(idx, idx[1:]):
+            assert start[b] >= end[a]
+    # barrier DAG: a waiter never starts before every producer whose
+    # signal it needs could have fired
+    producers = {}
+    for i, t in enumerate(cw.tasks):
+        for bid in t.signals:
+            producers.setdefault(bid, []).append(i)
+    for i, t in enumerate(cw.tasks):
+        for bid, need in t.waits:
+            ends = sorted(end[j] for j in producers[bid])
+            assert start[i] >= ends[need - 1] - 1e-9
+    # durations come from the analytic models: strictly positive
+    assert (table.duration > 0).all()
+
+
+def test_lowered_layer_labels():
+    cw = compile_ops(resolve_workload("lm/qwen3-32b/L8/s64b2tp2pod2")(),
+                     V5E, CompileOptions(n_tiles=2))
+    table = fastsim.lower(cw, V5E)
+    assert set(table.layer.tolist()) == set(range(8)) | {-1}
+    assert table.n_barriers == cw.n_barriers
+
+
+# -- engine routing ---------------------------------------------------------
+
+def test_engine_routing_and_cache_keys():
+    assert resolve_engine("event", "anything") == "event"
+    assert resolve_engine("fast", "anything") == "fast"
+    assert resolve_engine("auto", "mobilenet_v2") == "event"
+    assert resolve_engine("auto", "lm/qwen3-32b/s64b1tp1") == "event"
+    assert resolve_engine(
+        "auto", "lm/qwen3-32b/L32/s1024b8tp4pod8") == "fast"
+    assert resolve_engine(
+        "auto", "lm/qwen3-32b/L2/s64b4tp2dp2pod2") == "event"
+
+    base = dict(workload="mobilenet_v2", n_tiles=2, hw=to_dict(CFG),
+                compile_opts={}, pti_ns=1e4, temp_c=60.0,
+                keep_series=False)
+    keys = {content_key(refine_payload(**base, engine=e))
+            for e in ("event", "fast", "auto")}
+    assert len(keys) == 3                    # engine is in the cache key
+
+    with pytest.raises(ValueError):
+        refine_payload(**base, engine="warp")
+    with pytest.raises(ValueError):
+        RefineSpec(engine="warp")
+
+
+def test_refine_spec_engine_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_REFINE_ENGINE", "fast")
+    assert RefineSpec().engine == "fast"
+    monkeypatch.delenv("REPRO_REFINE_ENGINE")
+    assert RefineSpec().engine == "event"

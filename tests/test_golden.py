@@ -63,6 +63,18 @@ def _specs():
             preset="v5e", axes={"clock_ghz": [0.6, 0.94]}, n_tiles=[2],
             refine=RefineSpec(mode="pareto", max_points=1,
                               pti_ns=50_000.0)),
+        # refine.engine="fast": 16-layer points actually take the
+        # steady-state extrapolation path (ISSUE 5), so this slice locks
+        # both the fast engine's determinism across backends and its
+        # frozen record values
+        "lm_fast_engine_slice": SweepSpec(
+            name="lm_fast_engine_slice",
+            lm_grid={"arch": "qwen3-32b", "phase": ["prefill", "decode"],
+                     "seq": [64], "kv_len": [64], "batch": [4], "tp": [2],
+                     "dp": [2], "layers": [16], "pod": [2]},
+            preset="v5e", axes={"clock_ghz": [0.6, 0.94]}, n_tiles=[2],
+            refine=RefineSpec(mode="pareto", max_points=1,
+                              pti_ns=50_000.0, engine="fast")),
     }
 
 
