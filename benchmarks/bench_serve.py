@@ -1,0 +1,91 @@
+"""Serving-fleet simulation throughput: requests simulated per second.
+
+Times one ``serve_fleet``-class campaign cell end to end — trace
+generation, the ``ServeCostModel`` compiles (a handful of bucketed
+prefill/decode steps), and the fleet event loop — then re-times the
+event loop alone over a long trace with the compiled costs warm. The
+warm number is the one that matters for campaign scaling: a 48-point
+``serve_fleet`` run re-uses the same few step costs across every
+traffic/policy/rate cell, so cost compiles amortize to ~zero and the
+per-cell price is the event loop.
+
+Emits ``BENCH_serve.json``. No threshold gate — 2-CPU CI runners are
+noisy; CI archives the JSON as an artifact (next to ``BENCH_refine``)
+so the trajectory is inspectable per commit.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serve.py [--out PATH]
+                                                      [--requests N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.hw.presets import resolve_preset, to_dict
+from repro.serve.fleet import serve_payload, simulate_serve_point
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO, "BENCH_serve.json")
+
+
+def _payload(n_requests: int, seed: int = 0) -> dict:
+    """One serve_fleet campaign cell (tp4/dp2 continuous bursty)."""
+    return serve_payload(
+        workload="bench/serve", arch="qwen3-32b", layers=32, prompt=512,
+        max_new=64, tp=4, ep=1, dp=2, pod=8, slots=16, kv_capacity=1024,
+        policy="continuous",
+        traffic={"kind": "bursty", "rate_rps": 16.0,
+                 "n_requests": n_requests, "seed": seed},
+        slo={"ttft_ms": 2000.0, "tpot_ms": 100.0}, n_tiles=2,
+        hw=to_dict(resolve_preset("v5e")), temp_c=60.0)
+
+
+def run(out_path: str = DEFAULT_OUT, n_requests: int = 100_000) -> dict:
+    # cold: one realistic campaign cell, compiles included
+    cold_n = 4000
+    t0 = time.time()
+    rec = simulate_serve_point(_payload(cold_n))
+    cold_s = time.time() - t0
+
+    # long: 100k-class trace; the compile cost is the same handful of
+    # bucketed steps, so this isolates event-loop throughput
+    t0 = time.time()
+    rec_long = simulate_serve_point(_payload(n_requests, seed=1))
+    warm_s = time.time() - t0
+
+    out = {
+        "cell_requests": cold_n,
+        "cell_wall_s": cold_s,
+        "cell_requests_per_s": cold_n / cold_s,
+        "long_requests": n_requests,
+        "long_wall_s": warm_s,
+        "long_requests_per_s": n_requests / warm_s,
+        "long_steps": rec_long["steps"],
+        "long_goodput_rps": rec_long["goodput_rps"],
+        "cell_goodput_rps": rec["goodput_rps"],
+    }
+    print(f"cold cell : {cold_n:7d} requests in {cold_s:6.2f}s  "
+          f"({out['cell_requests_per_s']:9.0f} req/s simulated)")
+    print(f"long trace: {n_requests:7d} requests in {warm_s:6.2f}s  "
+          f"({out['long_requests_per_s']:9.0f} req/s simulated, "
+          f"{rec_long['steps']} fleet steps)")
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {out_path}")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--requests", type=int, default=100_000,
+                    help="long-trace request count (default 100000)")
+    args = ap.parse_args()
+    run(args.out, args.requests)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

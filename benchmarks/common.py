@@ -4,7 +4,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Any, Dict, List
+from typing import Any
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 CAMPAIGN_DIR = os.path.join(ART_DIR, "campaigns")

@@ -62,7 +62,7 @@ def main(print_csv=True):
     out = run()
     if print_csv:
         s = out["summary"]
-        print(f"# Fig-5 analog (paper: 1.9x, 1.47x, +25-45%)")
+        print("# Fig-5 analog (paper: 1.9x, 1.47x, +25-45%)")
         print(f"tiles 1->2: {s['avg_scaling_1_to_2_tiles']:.2f}x   "
               f"2->4: {s['avg_scaling_2_to_4_tiles']:.2f}x   "
               f"2K->4K MACs: +{100*(s['avg_gain_2K_to_4K_macs']-1):.0f}%")

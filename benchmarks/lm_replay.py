@@ -8,7 +8,6 @@ dependency-chain serialization the roofline's perfect-overlap bound ignores.
 """
 from __future__ import annotations
 
-import glob
 import gzip
 import os
 import time

@@ -330,6 +330,64 @@ def pod_pareto_section() -> str:
     return "\n".join(lines)
 
 
+def serve_fleet_section() -> str:
+    """Serving-fleet SLO answer from the serve_fleet campaign: per
+    offered load and traffic pattern, the cheapest fleet (fewest chips,
+    then lowest J/request) whose TTFT/TPOT percentiles meet the SLO."""
+    p = os.path.join(ART_DIR, "campaigns", "serve_fleet.json")
+    if not os.path.exists(p):
+        return ""
+    with open(p) as f:
+        d = json.load(f)
+    recs = [r for r in d["records"] if r.get("serve") and r.get("refined")]
+    if not recs:
+        return ""
+    slo = d["spec"]["serve_grid"]["slo"]
+    lines = ["## §Serving-fleet SLO campaign (serve_fleet)", ""]
+    lines.append(
+        "Trace-driven fleet simulation (`repro.serve.fleet`): open-loop "
+        "Poisson and bursty (MMPP-2) request arrivals into a continuous- "
+        "or static-batching scheduler over analytic per-step costs, per- "
+        "request TTFT/TPOT percentiles rolled up per cell. The question "
+        f"each row answers: **what is the cheapest fleet that serves the "
+        f"offered load within SLO** (TTFT p95 <= {slo['ttft_ms']:g} ms, "
+        f"TPOT p95 <= {slo['tpot_ms']:g} ms, >=99% of completed requests "
+        "in-SLO, nothing rejected)?")
+    lines.append("")
+    lines.append("| offered (req/s) | traffic | cheapest in-SLO fleet | "
+                 "chips | policy | goodput (req/s) | ttft p99 (ms) | "
+                 "tpot p99 (ms) | J/req |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    loads = sorted({(r["overrides"]["rate_rps"], r["overrides"]["traffic"])
+                    for r in recs})
+    for rate, traffic in loads:
+        cell = [r for r in recs
+                if r["overrides"]["rate_rps"] == rate
+                and r["overrides"]["traffic"] == traffic]
+        ok = [r for r in cell if r["slo_attainment"] >= 0.99
+              and r["rejected"] == 0 and r["evicted"] == 0]
+        if not ok:
+            lines.append(f"| {rate:g} | {traffic} | *none in grid meets "
+                         f"SLO* | — | — | — | — | — | — |")
+            continue
+        b = min(ok, key=lambda r: (r["chips"], r["energy_per_req_j"]))
+        lines.append(
+            f"| {rate:g} | {traffic} | `{b['workload']}` | {b['chips']} | "
+            f"{b['overrides']['policy']} | {b['goodput_rps']:.2f} | "
+            f"{b['ttft_p99_ms']:.0f} | {b['tpot_p99_ms']:.1f} | "
+            f"{b['energy_per_req_j']:.0f} |")
+    lines.append("")
+    lines.append(
+        "Reading: the chips column is the provisioning answer — rows "
+        "where only the larger TP or DP shapes qualify show the load "
+        "level at which the smaller fleet falls out of SLO (queueing "
+        "pushes TTFT tails past the bound before raw throughput "
+        "saturates, and bursty arrivals need headroom Poisson does not). "
+        "Records: `benchmarks/artifacts/campaigns/serve_fleet.json` "
+        "(`python -m repro.sweep run serve_fleet --backend pool`).")
+    return "\n".join(lines)
+
+
 def perf_delta_section() -> str:
     rows = _load("perf_delta.json")
     if not rows:
@@ -395,6 +453,10 @@ def main():
     pp = pod_pareto_section()
     if pp:
         print(pp)
+        print()
+    sv = serve_fleet_section()
+    if sv:
+        print(sv)
         print()
     pr = phase_roofline_section()
     if pr:

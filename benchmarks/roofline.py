@@ -22,7 +22,7 @@ import json
 import os
 from typing import Dict, Optional
 
-from repro.configs import REGISTRY, SHAPES, get_config, get_shape
+from repro.configs import get_config, get_shape
 from repro.graph.hlo_parser import summarize
 
 from .common import ART_DIR, save_json

@@ -11,7 +11,7 @@ prefill_32k / decode_32k / long_500k) and knows which program it lowers
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "applicable", "skip_reason"]

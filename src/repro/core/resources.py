@@ -15,9 +15,9 @@ from __future__ import annotations
 
 import heapq
 import operator
-from typing import Any, Callable, List, Optional
+from typing import Any, List
 
-from .engine import Environment, Event, NORMAL, URGENT
+from .engine import Environment, Event, URGENT
 
 _BY_KEY = operator.attrgetter("key")
 

@@ -18,8 +18,8 @@ Mirrors the paper's processing-flow model (§3.3):
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 from ..hw.dma import DmaDescriptor
 from ..hw.ici import CollectiveSpec

@@ -19,10 +19,9 @@ condition), validated against cost_analysis on unrolled modules in tests.
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -18,10 +18,9 @@ models the software-stack layers above the hardware scheduler:
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
 
-from ..core import Environment, Tracer
 from ..hw.chip import System
 from ..hw.presets import HwConfig
 from .tasks import Task

@@ -16,9 +16,9 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
-from ..core import Environment, Event, Store, TaskRecord, Tracer
+from ..core import Environment, Event, Store, Tracer
 
 __all__ = ["Task", "BarrierScoreboard", "Scheduler"]
 

@@ -13,17 +13,17 @@ wait consumer barriers -> execute (sub-task pipeline inside the hw model)
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, Generator, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, Generator, Optional, Sequence
 
 from ..core import Environment, Store, TaskRecord, Tracer
 from ..graph.tasks import BarrierScoreboard, Scheduler, Task
-from .dma import Dma, DmaDescriptor
-from .ici import CollectiveSpec, IciFabric, Router
+from .dma import Dma
+from .ici import IciFabric, Router
 from .memory import Hbm, VMem
-from .mxu import GemmSpec, Mxu
+from .mxu import Mxu
 from .presets import HwConfig
-from .vecunit import VecSpec, VecUnit
+from .vecunit import VecUnit
 
 __all__ = ["Tile", "System", "simulate", "Report"]
 

@@ -14,7 +14,7 @@ and broadcast (one HBM read fanned out to N tile VMEMs).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Generator, List, Optional, Sequence, Tuple
 
 from ..core import Environment, Resource, Tracer

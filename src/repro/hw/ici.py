@@ -10,9 +10,8 @@ up in the timeline.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Generator, List, Optional
+from typing import Generator
 
 from ..core import Environment, PriorityItem, PriorityStore, Resource, Tracer
 from .presets import HwConfig

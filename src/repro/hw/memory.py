@@ -16,7 +16,7 @@ retained, only the constants changed (recorded in DESIGN.md).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Generator, Optional, Tuple
+from typing import Dict, Generator, Tuple
 
 from ..core import Container, Environment, Resource, Tracer
 from .presets import HwConfig

@@ -19,9 +19,8 @@ Faithful structure, TPU-adapted constants:
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Generator, Optional, Tuple
+from dataclasses import dataclass
+from typing import Generator, Tuple
 
 from ..core import Environment, Store, Tracer
 from .memory import VMem

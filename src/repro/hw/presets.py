@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 __all__ = ["HwConfig", "V5E", "V5E_HALF_MACS", "paper_skew", "from_dict",
            "to_dict", "PRESETS", "resolve_preset"]

@@ -15,7 +15,7 @@ constants for the common kernels (DESIGN.md §assumption-changes).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Generator, Iterable, List, Tuple
+from typing import Dict, Generator, Iterable, Tuple
 
 import numpy as np
 

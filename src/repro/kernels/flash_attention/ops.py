@@ -7,10 +7,8 @@ layout, flattens heads into the batch dim, dispatches to the Pallas kernel
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import flash_attention
 

@@ -11,7 +11,7 @@ The 'pod' axis crosses DCN; 'data'/'model' stay on intra-pod ICI.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh

@@ -6,7 +6,6 @@ path means the dry-run provably exercises the deployed program.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -16,7 +15,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ShapeSpec
 from ..distributed.sharding import ShardingRules, rules_for
-from ..models.layers import abstract_params, param_pspecs
+from ..models.layers import abstract_params
 from ..models.model import Model, build_model
 from ..serve.engine import make_decode_fn, make_prefill_fn
 from ..train.loop import abstract_state, batch_pspecs, make_train_step, \

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import SHAPES, get_config
+from ..configs import get_config
 from ..configs.base import ShapeSpec
 from ..models import build_model
 from ..train import (CheckpointManager, SyntheticData, init_state,

@@ -18,7 +18,7 @@ Shapes: q [B,S,H,hd], k/v [B,Skv,KV,hd], cache k/v [B,Smax,KV,hd].
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

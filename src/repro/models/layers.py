@@ -12,12 +12,12 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..distributed.sharding import ShardingRules, constrain, logical_to_pspec
+from ..distributed.sharding import ShardingRules, constrain
 
 __all__ = [
     "PT",

@@ -14,15 +14,15 @@ The same block numerics serve train, prefill and decode (kv/ssm/cell cache).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, ShapeSpec
 from ..distributed.sharding import constrain
-from .blocks import BLOCKS, Block, BlockCtx, stackify
+from .blocks import BLOCKS, BlockCtx, stackify
 from .layers import (
     PT,
     abstract_params,

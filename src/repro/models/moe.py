@@ -19,7 +19,7 @@ recorded in DESIGN.md §assumption-changes).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,10 +15,9 @@ tests. All values are per *chip*; tile-level nodes divide by tile count.
 from __future__ import annotations
 
 import bisect
-from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple
 
-import numpy as np
 
 __all__ = ["LeakageLUT", "VFCurve", "PowerChar", "DEFAULT_CHARS",
            "NOMINAL_TEMP_C", "NOMINAL_FREQ_GHZ"]

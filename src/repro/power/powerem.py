@@ -16,7 +16,7 @@ from this.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -26,7 +26,7 @@ from ..hw.presets import HwConfig
 from .characterization import DEFAULT_CHARS, NOMINAL_TEMP_C, PowerChar
 
 __all__ = ["PowerNode", "build_power_tree", "PowerEM", "PowerReport",
-           "analytic_power_w"]
+           "analytic_power_w", "pod_power_w"]
 
 
 @dataclass
@@ -130,6 +130,23 @@ def analytic_power_w(cfg: HwConfig, util: Dict[str, float], *,
         u = util.get(family, 0.0) if node.name != "chip" else 1.0
         total += node.scale * node.char.total_w(f, u, temp_c)
     return total
+
+
+def pod_power_w(cfg: HwConfig, util: Dict[str, float], *, chips: int,
+                n_tiles: int = 1, freq_ghz: Optional[float] = None,
+                temp_c: float = NOMINAL_TEMP_C) -> float:
+    """Fleet-level average power for ``chips`` identical devices.
+
+    Serving fleets and pod campaigns run symmetric SPMD programs: every
+    chip executes the same per-device schedule, so one chip's analytic
+    power under the shared utilization profile scales linearly to the
+    whole fleet. (DCN switches and host machines are out of scope, as
+    they are for the per-chip power tree.)
+    """
+    if chips < 1:
+        raise ValueError(f"need chips >= 1, got {chips}")
+    return chips * analytic_power_w(cfg, util, n_tiles=n_tiles,
+                                    freq_ghz=freq_ghz, temp_c=temp_c)
 
 
 @dataclass

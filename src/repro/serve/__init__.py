@@ -1,4 +1,28 @@
-"""Serving substrate: prefill/decode programs + batched engine."""
-from .engine import Request, ServeEngine, make_decode_fn, make_prefill_fn
+"""Serving substrate.
+
+Two halves with different import weights:
+
+* ``serve.engine`` — the real thing: jitted prefill/decode programs and
+  the batched ``ServeEngine`` (jax; the correctness reference).
+* ``serve.traffic`` / ``serve.fleet`` — the modeled thing: synthetic
+  arrival traces and the event-based fleet simulator that serving
+  campaigns refine through ``sweep.refine`` worker processes.
+
+The engine symbols are re-exported lazily (PEP 562): importing
+``repro.serve.fleet`` from a spawn-context refinement worker must not
+drag jax in (the jax-free-import contract of ``sweep.refine``).
+"""
+from typing import TYPE_CHECKING
 
 __all__ = ["Request", "ServeEngine", "make_decode_fn", "make_prefill_fn"]
+
+if TYPE_CHECKING:  # pragma: no cover - static analysis only
+    from .engine import (Request, ServeEngine, make_decode_fn,
+                         make_prefill_fn)
+
+
+def __getattr__(name):
+    if name in __all__:
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

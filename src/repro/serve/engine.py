@@ -10,15 +10,14 @@ cannot head-of-line-block the batch.
 """
 from __future__ import annotations
 
-import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ArchConfig
 from ..distributed.sharding import ShardingRules, use_rules
 from ..models.model import Model
 
@@ -76,9 +75,10 @@ class ServeEngine:
         pf, dc = make_prefill_fn(model, rules, smax), make_decode_fn(model, rules)
         self.prefill_fn = jax.jit(pf) if jit else pf
         self.decode_fn = jax.jit(dc, donate_argnums=(1,)) if jit else dc
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self.completed: Dict[int, Request] = {}
         self.evicted: List[int] = []
+        self.evicted_partial: Dict[int, Request] = {}
         self._rid = 0
 
     def submit(self, prompt: np.ndarray, max_new: int = 16,
@@ -98,9 +98,15 @@ class ServeEngine:
         return logits, cache
 
     def run(self, batch_size: int = 4) -> Dict[int, List[int]]:
-        """Drain the queue; returns {rid: generated tokens}."""
+        """Drain the queue; returns {rid: generated tokens}.
+
+        Permanently-evicted stragglers (retry budget exhausted) keep
+        their rid in ``self.evicted`` AND contribute whatever they
+        generated to the returned mapping — a stalled stream's partial
+        output is still an answer the caller paid for.
+        """
         while self.queue:
-            reqs = [self.queue.pop(0) for _ in
+            reqs = [self.queue.popleft() for _ in
                     range(min(batch_size, len(self.queue)))]
             logits, cache = self._prefill_batch(reqs)
             next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
@@ -123,9 +129,13 @@ class ServeEngine:
                             self.queue.append(r)
                         else:
                             self.evicted.append(r.rid)
+                            self.evicted_partial[r.rid] = r
                 if not live:
                     break
                 logits, cache = self.decode_fn(
                     self.params, cache, jnp.asarray(next_tok)[:, None])
                 next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
-        return {rid: r.generated for rid, r in self.completed.items()}
+        out = {rid: r.generated for rid, r in self.completed.items()}
+        out.update({rid: r.generated
+                    for rid, r in self.evicted_partial.items()})
+        return out

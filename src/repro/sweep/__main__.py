@@ -84,6 +84,11 @@ def cmd_run(args: argparse.Namespace) -> int:
         b = s["best_time_point"]
         print(f"best_time_ns,{b['time_ns']:.6g},"
               f"{b['workload']} {b['overrides']}")
+    if "best_goodput_point" in s:
+        b = s["best_goodput_point"]
+        print(f"best_goodput_rps,{b['goodput_rps']:.6g},"
+              f"{b['workload']} ({b['chips']} chips, "
+              f"{b['energy_per_req_j']:.4g} J/req)")
     print(f"artifact,{out},")
     print(f"journal,{journal},")
     return 0

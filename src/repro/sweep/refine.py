@@ -21,6 +21,12 @@ Since ISSUE 5 a refinement payload carries an ``engine`` field:
 The field is part of the payload, so it travels through every
 ``repro.exec`` backend unchanged and lands in the result-cache content
 key — switching engines never serves a stale record.
+
+Since ISSUE 6 a payload may instead carry ``kind: "serve"``: a
+serving-fleet cell (``serve.fleet.simulate_serve_point`` — trace-driven
+continuous batching over analytic step costs). The kind field routes it
+here and keys the cache, so serve cells flow through every backend, the
+journal, and the result cache exactly like classic refinements.
 """
 from __future__ import annotations
 
@@ -133,9 +139,14 @@ def _record(cfg: HwConfig, nt: int, cw: CompiledWorkload, *,
 def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
     """Compile + simulate + Power-EM one hardware point.
 
+    ``payload["kind"]`` routes whole refinement families first
+    (``"serve"`` -> the fleet simulator); within the classic family,
     ``payload["engine"]`` routes between the event engine and the
     ``core.fastsim`` interval-replay engine (see module docstring).
     """
+    if payload.get("kind") == "serve":
+        from ..serve.fleet import simulate_serve_point
+        return simulate_serve_point(payload)
     engine = resolve_engine(payload.get("engine", "event"),
                             payload["workload"])
     cfg = from_dict(payload["hw"])

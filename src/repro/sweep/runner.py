@@ -35,6 +35,7 @@ import numpy as np
 from ..exec.backend import Backend, canonical as _canon, get_backend
 from ..exec.journal import CampaignJournal
 from ..hw.presets import to_dict
+from ..serve.fleet import serve_payload
 from .cache import ResultCache, content_key
 from .pareto import select_points
 from .prescreen import prescreen_cell
@@ -50,8 +51,12 @@ RESULT_SCHEMA = 1
 def _best(records: List[Dict[str, Any]], key: str
           ) -> Optional[Dict[str, Any]]:
     """Deterministic argmin over refined records: ties on the metric are
-    broken by grid index, so reports are stable across runs/backends."""
-    refined = [r for r in records if r.get("refined")]
+    broken by grid index, so reports are stable across runs/backends.
+    Serving-fleet records are excluded — their metrics (fleet energy,
+    request latency) are not comparable to per-inference ones; the
+    summary ranks them separately (``best_goodput_point``)."""
+    refined = [r for r in records
+               if r.get("refined") and key in r and not r.get("serve")]
     if not refined:
         return None
     return min(refined,
@@ -207,6 +212,38 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         _log(progress, f"select {cell.label}: {len(picked)}/"
              f"{len(cell.points)} points for event-engine refinement")
 
+    # -- phase 2b: serving-fleet cells -----------------------------------
+    # serve_grid points bypass the analytic pre-screen (their metric is
+    # request-level, not step-level): every one becomes a `kind: "serve"`
+    # refinement payload and flows through the same backend/cache/journal
+    # machinery as classic points
+    serve_pts = spec.serve_points()
+    if serve_pts:
+        cfg = spec.hw_config({})
+        hw = to_dict(cfg)
+        nt = spec.n_tiles[0]
+        for sp in serve_pts:
+            rec = {
+                "point_id": sp.point_id(),
+                "grid_index": len(records),
+                "campaign": spec.name,
+                "workload": sp.workload,
+                "n_tiles": nt,
+                "overrides": dict(sp.overrides),
+                "hw_name": cfg.name,
+                "selected": True,
+                "refined": False,
+                "cached": False,
+            }
+            todo.append(serve_payload(
+                workload=sp.workload, n_tiles=nt, hw=hw,
+                temp_c=spec.refine.temp_c,
+                compile_opts=dict(spec.compile_opts), **sp.params))
+            todo_idx.append(len(records))
+            records.append(rec)
+        _log(progress, f"serve: {len(serve_pts)} fleet cells queued "
+             f"for trace-driven simulation")
+
     # -- phase 3: cached backend refinement ------------------------------
     t0 = time.time()
     keys = [content_key(p) for p in todo]
@@ -249,7 +286,7 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         rec = records[todo_idx[i]]
         rec.update(res)
         rec["refined"] = True
-        if rec["analytic_time_ns"] > 0:
+        if rec.get("analytic_time_ns", 0) > 0:
             rec["deviation"] = rec["time_ns"] / rec["analytic_time_ns"]
             deviations.append(rec["deviation"])
     _log(progress, f"refine: {len(todo)} points "
@@ -258,6 +295,7 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
 
     summary = {
         "grid_points": len(records),
+        "serve_points": len(serve_pts),
         "cells": len(cells),
         "prescreen_calls": len(cells),
         "backend": bk.name,
@@ -279,6 +317,16 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         summary["best_energy_point"] = {
             "point_id": beste["point_id"], "workload": beste["workload"],
             "overrides": beste["overrides"], "energy_j": beste["energy_j"]}
+    serve_recs = [r for r in records
+                  if r.get("refined") and r.get("serve")]
+    if serve_recs:
+        bg = max(serve_recs,
+                 key=lambda r: (r["goodput_rps"], -r["grid_index"]))
+        summary["best_goodput_point"] = {
+            "point_id": bg["point_id"], "workload": bg["workload"],
+            "overrides": bg["overrides"],
+            "goodput_rps": bg["goodput_rps"], "chips": bg["chips"],
+            "energy_per_req_j": bg["energy_per_req_j"]}
     if cache is not None:
         cache.log_stats(campaign=spec.name)
     if journal:

@@ -58,12 +58,15 @@ import os
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-from ..graph.workloads import is_workload, lm_grid_names
+from ..graph.workloads import (is_workload, lm_grid_names,
+                               lm_workload_name, parse_lm_name)
 from ..hw.presets import HwConfig, resolve_preset
 from ..power.characterization import NOMINAL_TEMP_C
+from ..serve.fleet import POLICIES
+from ..serve.traffic import TRAFFIC_KINDS
 
 __all__ = ["ANALYTIC_AXES", "RefineSpec", "SweepSpec", "GridPoint",
-           "SweepCell", "load_spec", "load_builtin_spec",
+           "SweepCell", "ServePoint", "load_spec", "load_builtin_spec",
            "builtin_spec_names", "BUILTIN_SPEC_DIR"]
 
 # HwConfig fields fully captured by core.vectorized.params_of — safe to
@@ -134,6 +137,15 @@ class SweepSpec:
     # (prefill) / ``lm/<arch>/decode/kv<K>b<B>tp<T>[ep<E>]`` (decode)
     # workloads (each combination is its own structural cell)
     lm_grid: Optional[Dict[str, Any]] = None
+    # serving-fleet grid (``serve.fleet``): one model deployment swept
+    # over arrival rate x batch policy x traffic shape x pod shape.
+    # Scalars: arch, layers, prompt, max_new, kv_capacity, n_requests,
+    # seed, slo {ttft_ms, tpot_ms} (+ optional max_queue, burst_x,
+    # dwell_s, trace_path). Axes (scalar or list): rate_rps, policy,
+    # traffic, tp, ep, dp, pod, slots. Expands into ServePoints — each
+    # refines through the ``kind: "serve"`` payload family, not the
+    # pre-screen. Full reference: docs/CAMPAIGNS.md.
+    serve_grid: Optional[Dict[str, Any]] = None
 
     def __post_init__(self):
         if isinstance(self.refine, dict):
@@ -204,8 +216,11 @@ class SweepSpec:
             # same names, so only append ones not already present
             self.workloads = list(self.workloads) + \
                 [n for n in names if n not in self.workloads]
-        if not self.workloads:
-            raise ValueError("spec needs workloads (or a non-empty lm_grid)")
+        if self.serve_grid:
+            self.serve_points()       # validate eagerly: fail at load
+        if not self.workloads and not self.serve_grid:
+            raise ValueError("spec needs workloads (or a non-empty "
+                             "lm_grid or serve_grid)")
         unknown = [w for w in self.workloads if not is_workload(w)]
         if unknown:
             raise KeyError(f"unknown workloads {unknown}; have builtin "
@@ -243,7 +258,9 @@ class SweepSpec:
         n = len(self.workloads) * len(self.n_tiles)
         for vals in self.axes.values():
             n *= len(vals)
-        return n
+        if not self.workloads:
+            n = 0
+        return n + len(self.serve_points())
 
     def cells(self) -> List["SweepCell"]:
         """Structural cells, each carrying its analytic sub-grid."""
@@ -267,6 +284,103 @@ class SweepSpec:
     def hw_config(self, overrides: Dict[str, Any]) -> HwConfig:
         return resolve_preset(self.preset, **{**self.base, **overrides})
 
+    # -- serving-fleet grid -----------------------------------------------
+    def serve_points(self) -> List["ServePoint"]:
+        """Expand (and validate) ``serve_grid`` into ServePoints.
+
+        Grid order: tp-major, then ep, dp, pod, slots, policy, traffic,
+        rate_rps innermost — fleet shape first, then scheduling policy,
+        then load. Serving cells bypass the analytic pre-screen, so the
+        spec's hw ``axes`` do not cross with them (``preset`` + ``base``
+        define the chip); every ServePoint is one refinement payload.
+        """
+        if not self.serve_grid:
+            return []
+        g = dict(self.serve_grid)
+
+        def axis(key: str, default: Any) -> List[Any]:
+            v = g.pop(key, default)
+            return [v] if isinstance(v, (int, float, str)) else list(v)
+
+        try:
+            arch = g.pop("arch")
+            layers = int(g.pop("layers"))
+            prompt = int(g.pop("prompt"))
+            max_new = int(g.pop("max_new"))
+            kv_capacity = int(g.pop("kv_capacity"))
+            n_requests = int(g.pop("n_requests"))
+            slo = dict(g.pop("slo"))
+        except KeyError as e:
+            raise KeyError(f"serve_grid needs arch/layers/prompt/max_new/"
+                           f"kv_capacity/n_requests/slo; missing {e}")
+        seed = int(g.pop("seed", 0))
+        max_queue = int(g.pop("max_queue", 0))
+        burst_x = float(g.pop("burst_x", 4.0))
+        dwell_s = float(g.pop("dwell_s", 2.0))
+        trace_path = g.pop("trace_path", None)
+        tp = axis("tp", 1)
+        ep = axis("ep", 1)
+        dp = axis("dp", 1)
+        pod = axis("pod", 0)
+        slots = axis("slots", 8)
+        policy = axis("policy", "continuous")
+        traffic = axis("traffic", "poisson")
+        rate = [float(r) for r in axis("rate_rps", None)
+                if r is not None]
+        if g:
+            raise KeyError(f"unknown serve_grid keys {sorted(g)}")
+        if not rate:
+            raise KeyError("serve_grid needs a rate_rps axis")
+        if layers < 1 or prompt < 1 or max_new < 1 or n_requests < 1:
+            raise ValueError(
+                f"serve_grid needs layers/prompt/max_new/n_requests "
+                f">= 1, got {layers}/{prompt}/{max_new}/{n_requests}")
+        if not {"ttft_ms", "tpot_ms"} <= set(slo):
+            raise KeyError(f"serve_grid slo needs ttft_ms and tpot_ms, "
+                           f"got {sorted(slo)}")
+        bad_pol = [p for p in policy if p not in POLICIES]
+        bad_tr = [t for t in traffic if t not in TRAFFIC_KINDS]
+        if bad_pol or bad_tr:
+            raise ValueError(f"serve_grid policy must be {POLICIES} and "
+                             f"traffic {TRAFFIC_KINDS}; got "
+                             f"{bad_pol + bad_tr}")
+        if "jsonl" in traffic and not trace_path:
+            raise KeyError("serve_grid traffic 'jsonl' needs trace_path")
+        out: List[ServePoint] = []
+        for t, e, d, pc in itertools.product(tp, ep, dp, pod):
+            # arch/tp/ep/pod legality rides on the LM name validator
+            # (registry arch, MoE-only ep, ...) — the cost model builds
+            # exactly this name per step bucket
+            parse_lm_name(lm_workload_name(
+                arch, seq=prompt, batch=1, tp=t, ep=e,
+                layers=layers, dp=1, pod=pc))
+            for s, po, tr, r in itertools.product(slots, policy,
+                                                  traffic, rate):
+                tspec: Dict[str, Any] = {"kind": tr, "rate_rps": r,
+                                         "n_requests": n_requests,
+                                         "seed": seed}
+                if tr == "bursty":
+                    tspec.update(burst_x=burst_x, dwell_s=dwell_s)
+                if tr == "jsonl":
+                    tspec["path"] = trace_path
+                name = (f"serve/{arch}/L{layers}/p{prompt}g{max_new}"
+                        f"tp{t}" + (f"ep{e}" if e > 1 else "")
+                        + f"dp{d}" + (f"pod{pc}" if pc else "")
+                        + f"/s{s}kv{kv_capacity}/{po}/{tr}@r{r:g}")
+                out.append(ServePoint(
+                    workload=name,
+                    params={"arch": arch, "layers": layers,
+                            "prompt": prompt, "max_new": max_new,
+                            "tp": t, "ep": e, "dp": d, "pod": pc,
+                            "slots": int(s),
+                            "kv_capacity": kv_capacity,
+                            "policy": po, "max_queue": max_queue,
+                            "traffic": tspec, "slo": slo},
+                    overrides={"rate_rps": r, "policy": po,
+                               "traffic": tr, "slots": int(s), "tp": t,
+                               "ep": e, "dp": d, "pod": pc}))
+        return out
+
 
 @dataclass
 class GridPoint:
@@ -284,6 +398,25 @@ class GridPoint:
 
     def cfg(self, spec: SweepSpec) -> HwConfig:
         return spec.hw_config(self.overrides)
+
+
+@dataclass
+class ServePoint:
+    """One serving-fleet cell: a deployment under one traffic pattern.
+
+    ``params`` carries everything ``serve.fleet.serve_payload`` needs
+    beyond the spec-level plumbing (hw config, n_tiles, temp_c);
+    ``overrides`` holds the swept axis values for the campaign record,
+    mirroring ``GridPoint.overrides``.
+    """
+
+    workload: str
+    params: Dict[str, Any]
+    overrides: Dict[str, Any]
+
+    def point_id(self) -> str:
+        blob = json.dumps({"serve": self.params}, sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:12]
 
 
 @dataclass

@@ -11,8 +11,7 @@ batch)`` suitable for ``jax.jit`` with ``in_shardings`` from
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

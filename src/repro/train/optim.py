@@ -10,8 +10,7 @@ stable plateau, short exponential-ish decay tail.
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ from repro.graph.workloads import resnet50
 from repro.hw.chip import simulate
 from repro.hw.presets import paper_skew
 from repro.models import build_model
-from repro.models.layers import param_pspecs
 from repro.models.moe import moe_dense, moe_onehot, _moe_ep_local
 from repro.serve.engine import ServeEngine
 

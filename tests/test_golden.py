@@ -63,6 +63,21 @@ def _specs():
             preset="v5e", axes={"clock_ghz": [0.6, 0.94]}, n_tiles=[2],
             refine=RefineSpec(mode="pareto", max_points=1,
                               pti_ns=50_000.0)),
+        # serving-fleet cells (ISSUE 6): trace-driven continuous/static
+        # batching over analytic step costs — locks the traffic
+        # generators, the fleet event loop, and the SLO rollup across
+        # backends and against the frozen records
+        "serve_fleet_slice": SweepSpec(
+            name="serve_fleet_slice",
+            serve_grid={"arch": "qwen3-32b", "layers": 2, "prompt": 64,
+                        "max_new": 8, "kv_capacity": 128, "tp": [2],
+                        "dp": [1, 2], "pod": 0, "slots": 4,
+                        "policy": ["static", "continuous"],
+                        "traffic": ["poisson", "bursty"],
+                        "rate_rps": [50.0], "n_requests": 60, "seed": 7,
+                        "slo": {"ttft_ms": 500.0, "tpot_ms": 50.0}},
+            preset="v5e", n_tiles=[2],
+            refine=RefineSpec(mode="all")),
         # refine.engine="fast": 16-layer points actually take the
         # steady-state extrapolation path (ISSUE 5), so this slice locks
         # both the fast engine's determinism across backends and its

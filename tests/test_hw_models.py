@@ -1,6 +1,5 @@
 """Hardware component models: MXU pipeline, vec characterization, HBM
 paging, DMA descriptor splitting/compression, ICI collectives."""
-import numpy as np
 import pytest
 
 from repro.core import Environment, Tracer

@@ -6,9 +6,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.graph.compiler import CompileOptions, compile_ops
-from repro.graph.workloads import (lm_grid_names, lm_layer_ops,
-                                   lm_workload_name, resolve_workload,
-                                   workload_bytes, workload_flops)
+from repro.graph.workloads import (lm_layer_ops, lm_workload_name, resolve_workload, workload_bytes, workload_flops)
 from repro.hw.ici import CollectiveSpec
 from repro.hw.presets import resolve_preset
 

@@ -6,7 +6,7 @@ import pytest
 
 from benchmarks.roofline import model_flops
 from repro.configs import REGISTRY, SHAPES
-from repro.core.trace import Tracer, to_chrome_trace
+from repro.core.trace import to_chrome_trace
 from repro.graph.hlo_parser import Collective, TaskSpec
 from repro.graph.stackem import _clone_tasks
 from repro.graph.tasks import Task

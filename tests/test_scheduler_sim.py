@@ -1,17 +1,13 @@
 """Scheduler + barriers + full-system simulation behavior (paper §3.3)."""
-import pytest
 
 from repro.core import Environment
 from repro.graph.compiler import CompileOptions, compile_ops
 from repro.graph.tasks import BarrierScoreboard, Task
-from repro.graph.workloads import (mobilenet_v2, resnet50, tiny_yolo_v2,
-                                   workload_flops)
+from repro.graph.workloads import mobilenet_v2, resnet50, tiny_yolo_v2
 from repro.hw.chip import System, simulate
 from repro.hw.dma import DmaDescriptor
-from repro.hw.ici import CollectiveSpec
 from repro.hw.mxu import GemmSpec
 from repro.hw.presets import V5E, paper_skew
-from repro.hw.vecunit import VecSpec
 
 
 def test_barrier_scoreboard_semantics():

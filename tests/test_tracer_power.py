@@ -1,13 +1,11 @@
 """Tracer PTI accounting + Power-EM characterization and integration."""
-import math
 
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Tracer
 from repro.hw.presets import V5E, paper_skew
-from repro.power.characterization import (DEFAULT_CHARS, LeakageLUT,
-                                          PowerChar, VFCurve)
+from repro.power.characterization import DEFAULT_CHARS, LeakageLUT, VFCurve
 from repro.power.powerem import PowerEM, build_power_tree
 
 
