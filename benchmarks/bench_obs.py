@@ -1,0 +1,104 @@
+"""Metrics-overhead gate: telemetry must stay near-free when enabled.
+
+Times ``refine_point`` on the ``bench_refine`` 64-layer full-model pod
+point twice — registry disabled (the default) and collecting — and
+gates the min-of-repeats wall-time ratio at ``--max-overhead`` (5% by
+default, the ISSUE 7 contract). The instrumented run flows through
+every hot-path hook at once: the event engine's stats run-loop variant
+(the extrapolation replays layers through it), the fast engine's
+extrapolation/fallback counters, and the System resource-contention
+flush.
+
+Also asserts the record itself is unchanged by instrumentation —
+metrics are observers, never inputs.
+
+Run:  PYTHONPATH=src python benchmarks/bench_obs.py [--out PATH]
+          [--repeats N] [--max-overhead FRAC]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.hw.presets import resolve_preset, to_dict
+from repro.obs.metrics import REGISTRY, collecting
+from repro.sweep.refine import refine_payload, refine_point
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO, "BENCH_obs.json")
+
+# the bench_refine "full" case: steady-state extrapolation replays a
+# handful of layers on the (instrumented) event engine, synthesizes 64
+WORKLOAD = "lm/qwen3-32b/L64/s1024b8tp4pod8"
+PTI_NS = 1_000_000.0
+
+
+def _payload() -> dict:
+    return refine_payload(workload=WORKLOAD, n_tiles=2,
+                          hw=to_dict(resolve_preset("v5e")),
+                          compile_opts={}, pti_ns=PTI_NS, temp_c=60.0,
+                          keep_series=False, engine="fast")
+
+
+def _time_point(repeats: int) -> tuple:
+    best = float("inf")
+    rec = None
+    for _ in range(repeats):
+        payload = _payload()
+        t0 = time.time()
+        rec = refine_point(payload)
+        best = min(best, time.time() - t0)
+    return best, rec
+
+
+def run(out_path: str = DEFAULT_OUT, *, repeats: int = 3,
+        max_overhead: float = 0.05) -> dict:
+    assert not REGISTRY.enabled, \
+        "run this bench without REPRO_METRICS so the baseline is clean"
+    off_s, off_rec = _time_point(repeats)
+    with collecting() as reg:
+        on_s, on_rec = _time_point(repeats)
+        n_counters = len(reg.snapshot()["counters"])
+    assert n_counters > 0, "instrumented run recorded no metrics"
+    assert on_rec == off_rec, \
+        "metrics collection changed the refinement record"
+    overhead = on_s / off_s - 1.0
+    out = {
+        "workload": WORKLOAD,
+        "repeats": repeats,
+        "off_wall_s": off_s,
+        "on_wall_s": on_s,
+        "overhead_frac": overhead,
+        "max_overhead_frac": max_overhead,
+        "counters_recorded": n_counters,
+        "pass": overhead <= max_overhead,
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"metrics off {off_s:.3f}s  on {on_s:.3f}s  "
+          f"overhead {overhead * 100:+.2f}% "
+          f"(gate {max_overhead * 100:.0f}%)  -> {out_path}")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="min-of-N wall time per mode (damps CI noise)")
+    ap.add_argument("--max-overhead", type=float, default=0.05,
+                    help="fail above this on/off wall-time overhead")
+    args = ap.parse_args()
+    out = run(args.out, repeats=args.repeats,
+              max_overhead=args.max_overhead)
+    if not out["pass"]:
+        print(f"FAIL: metrics overhead {out['overhead_frac'] * 100:.2f}% "
+              f"exceeds {args.max_overhead * 100:.0f}%")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

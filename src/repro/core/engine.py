@@ -320,11 +320,17 @@ class Environment:
     convert cycles→ns via their clock).
     """
 
-    def __init__(self, initial_time: float = 0.0):
+    def __init__(self, initial_time: float = 0.0, *, stats: bool = False):
         self._now = float(initial_time)
         self._queue: list = []  # (time, priority, eid, event)
         self._eid = 0
         self._active_proc: Optional[Process] = None
+        # kernel observability (obs.metrics): collected only when
+        # ``stats`` is set — the default run loop stays untouched, which
+        # is what keeps the off-by-default overhead contract (<5%)
+        self.stats = stats
+        self.events_processed = 0
+        self.peak_heap = 0
 
     # -- clock ------------------------------------------------------------
     @property
@@ -393,6 +399,8 @@ class Environment:
         # event kernel spends most of its cycles right here
         queue = self._queue
         pop = heapq.heappop
+        if self.stats:
+            return self._run_instrumented(queue, pop, stop_at, stop_ev)
         while queue:
             if stop_at is not None and queue[0][0] >= stop_at:
                 self._now = stop_at
@@ -411,3 +419,38 @@ class Environment:
         if stop_ev is not None:
             raise RuntimeError("queue drained before `until` event triggered")
         return None
+
+    def _run_instrumented(self, queue: list, pop, stop_at, stop_ev) -> Any:
+        """The same inlined run loop plus kernel telemetry: events
+        processed and peak heap depth, accumulated in locals and flushed
+        once at exit (so the enabled-path overhead is one int add and
+        one compare per event)."""
+        n = self.events_processed
+        peak = self.peak_heap
+        try:
+            while queue:
+                depth = len(queue)
+                if depth > peak:
+                    peak = depth
+                if stop_at is not None and queue[0][0] >= stop_at:
+                    self._now = stop_at
+                    return None
+                t, _, _, event = pop(queue)
+                self._now = t
+                n += 1
+                callbacks, event.callbacks = event.callbacks, None
+                for cb in callbacks:
+                    cb(event)
+                if not event._ok and not event._defused:
+                    raise event._value
+                if stop_ev is not None and stop_ev.callbacks is None:
+                    if not stop_ev._ok:
+                        raise stop_ev._value
+                    return stop_ev._value
+            if stop_ev is not None:
+                raise RuntimeError(
+                    "queue drained before `until` event triggered")
+            return None
+        finally:
+            self.events_processed = n
+            self.peak_heap = peak

@@ -57,6 +57,7 @@ from ..hw.memory import Hbm
 from ..hw.mxu import GemmSpec, Mxu
 from ..hw.presets import HwConfig
 from ..hw.vecunit import VecSpec, VecUnit
+from ..obs.metrics import REGISTRY
 from .trace import SampleArrays
 
 __all__ = ["TaskTable", "lower", "list_schedule", "FastRun",
@@ -239,6 +240,8 @@ def replay_intervals(tasks: Sequence[Task], cfg: HwConfig, *,
     # every module) — interval consumers reduce arrays themselves
     done = sysm.scheduler.run(tasks)
     sysm.env.run(until=done)
+    # kernel/contention telemetry flows from fast-engine replays too
+    sysm.emit_metrics()
     tid, _enq, st, en = sysm.tracer.task_arrays()
     pos = {t.tid: i for i, t in enumerate(tasks)}
     idx = np.fromiter((pos[t] for t in tid.tolist()), np.int64, len(tid))
@@ -508,6 +511,17 @@ def try_extrapolate(full: CompiledWorkload, cfg: HwConfig, *,
                            "patched_tail": len(patches)}), ""
 
 
+def _reason_class(reasons: Sequence[str], extrapolate: bool) -> str:
+    """Low-cardinality metric label for a fallback: the deepest attempt's
+    reason with point-specific detail (numbers, parens) stripped."""
+    if not extrapolate:
+        return "disabled"
+    if not reasons:
+        return "no_reduced_workload"
+    head = re.split(r"[(\d]", reasons[-1])[0].strip()
+    return head.replace(" ", "_") or "unknown"
+
+
 def simulate_fast(full: CompiledWorkload, cfg: HwConfig, *, n_tiles: int,
                   reduced: Sequence[CompiledWorkload] = (),
                   extrapolate: bool = True) -> FastRun:
@@ -528,9 +542,21 @@ def simulate_fast(full: CompiledWorkload, cfg: HwConfig, *, n_tiles: int,
             if run is not None:
                 if reasons:
                     run.detail["retried"] = reasons
+                if REGISTRY.enabled:
+                    REGISTRY.counter("fastsim.extrapolated").inc()
+                    REGISTRY.histogram("fastsim.retry_depth",
+                                       bounds=(0.0, 1.0, 2.0, 4.0)
+                                       ).observe(len(reasons))
                 return run
             reasons.append(reason)
-    return _full_replay(full.tasks, cfg, n_tiles,
-                        "; ".join(reasons) if reasons else
-                        ("extrapolation disabled" if not extrapolate
-                         else "no reduced workload"))
+    fallback = ("; ".join(reasons) if reasons else
+                ("extrapolation disabled" if not extrapolate
+                 else "no reduced workload"))
+    if REGISTRY.enabled:
+        REGISTRY.counter("fastsim.full_replay",
+                         reason=_reason_class(reasons, extrapolate)).inc()
+        if reasons:
+            REGISTRY.histogram("fastsim.retry_depth",
+                               bounds=(0.0, 1.0, 2.0, 4.0)
+                               ).observe(len(reasons))
+    return _full_replay(full.tasks, cfg, n_tiles, fallback)

@@ -220,7 +220,8 @@ class Resource:
         res.release(req)
     """
 
-    __slots__ = ("env", "capacity", "name", "users", "_queue", "_seq")
+    __slots__ = ("env", "capacity", "name", "users", "_queue", "_seq",
+                 "n_requests", "n_stalls")
 
     def __init__(self, env: Environment, capacity: int = 1, name: str = ""):
         if capacity <= 0:
@@ -231,6 +232,12 @@ class Resource:
         self.users: List[_Request] = []
         self._queue: List[_Request] = []
         self._seq = 0
+        # contention telemetry (obs.metrics): requests seen / requests
+        # that could not be granted immediately. Two int adds per
+        # request — requests are orders of magnitude rarer than kernel
+        # events, so this stays always-on (and deterministic).
+        self.n_requests = 0
+        self.n_stalls = 0
 
     @property
     def count(self) -> int:
@@ -254,6 +261,9 @@ class Resource:
         else:
             q.append(req)
         self._dispatch()
+        self.n_requests += 1
+        if not req.triggered:
+            self.n_stalls += 1
         return req
 
     def release(self, req: _Request) -> None:

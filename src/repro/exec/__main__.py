@@ -1,20 +1,26 @@
 """Execution-service CLI.
 
   python -m repro.exec worker <spool> [--follow] [--max-jobs N]
-  python -m repro.exec status <spool>
+  python -m repro.exec status <spool-dir|journal.jsonl> [--watch]
   python -m repro.exec journal <file> [--expect-done] [--min-points N]
 
 ``worker`` drains (or, with ``--follow``, keeps watching) a filesystem
 job spool — run any number of these, from any process or host sharing
-the spool directory. ``status`` prints queue counts. ``journal`` folds a
-campaign journal into per-status counts; ``--expect-done`` exits
-non-zero unless every point resolved (the CI smoke assertion).
+the spool directory. ``status`` on a spool directory prints queue
+counts; on a campaign journal it folds per-phase throughput (points/s,
+cached vs simulated), per-worker liveness, and an ETA — ``--watch``
+tails the journal incrementally (complete lines only, torn-tail safe)
+and reprints until the campaign finishes. ``journal`` folds a campaign
+journal into per-status counts; ``--expect-done`` exits non-zero unless
+every point resolved (the CI smoke assertion).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import time
 
 from .journal import CampaignJournal
 from .spool import Spool
@@ -30,14 +36,38 @@ def cmd_worker(args: argparse.Namespace) -> int:
 
 
 def cmd_status(args: argparse.Namespace) -> int:
-    counts = Spool(args.spool).counts()
-    for state, n in counts.items():
-        print(f"{state},{n}")
-    return 0
+    if os.path.isdir(args.path):
+        spool = Spool(args.path)
+        while True:
+            counts = spool.counts()
+            for state, n in counts.items():
+                print(f"{state},{n}", flush=True)
+            if not args.watch or (counts["jobs"] == 0
+                                  and counts["active"] == 0):
+                return 0
+            time.sleep(args.interval)
+    # a campaign journal: fold incrementally into progress + ETA
+    from ..obs.progress import (CampaignProgress, JournalFollower,
+                                render_progress)
+    prog = CampaignProgress()
+    follower = JournalFollower(args.path)
+    while True:
+        prog.feed_all(follower.poll())
+        for w in follower.warnings:
+            print(f"warning: {w}", file=sys.stderr)
+        follower.warnings.clear()
+        s = prog.summary(now=time.time() if args.watch else None)
+        for line in render_progress(s):
+            print(line, flush=True)
+        if not args.watch or s["finished"]:
+            return 0
+        time.sleep(args.interval)
 
 
 def cmd_journal(args: argparse.Namespace) -> int:
     view = CampaignJournal.load(args.path)
+    for w in view.warnings:
+        print(f"warning: {w}", file=sys.stderr)
     counts = view.counts()
     for k in ("total", "done", "cached", "failed", "other"):
         print(f"{k},{counts[k]}")
@@ -65,8 +95,14 @@ def main(argv=None) -> int:
     wp.add_argument("--max-jobs", type=int, default=None)
     wp.set_defaults(fn=cmd_worker)
 
-    stp = sub.add_parser("status", help="print spool queue counts")
-    stp.add_argument("spool")
+    stp = sub.add_parser(
+        "status", help="spool queue counts, or campaign progress + ETA "
+                       "from a journal file")
+    stp.add_argument("path", help="spool directory or journal .jsonl")
+    stp.add_argument("--watch", action="store_true",
+                     help="keep tailing/reprinting until finished")
+    stp.add_argument("--interval", type=float, default=2.0,
+                     help="watch poll interval in seconds")
     stp.set_defaults(fn=cmd_status)
 
     jp = sub.add_parser("journal", help="summarize a campaign journal")

@@ -71,34 +71,54 @@ class CampaignJournal:
 
 @dataclass
 class JournalView:
-    """Folded view of a journal stream: latest status per point."""
+    """Folded view of a journal stream: latest status per point.
+
+    Torn lines (a writer killed mid-``write`` leaves a truncated final
+    line; a line missing its newline gets the next event glued onto it)
+    are skipped, never fatal — each skip is recorded in ``warnings`` so
+    CLI consumers can surface them instead of silently under-counting.
+    """
 
     events: List[Dict[str, Any]] = field(default_factory=list)
     points: Dict[str, Dict[str, Any]] = field(default_factory=dict)
     start_ev: Optional[Dict[str, Any]] = None
     end_ev: Optional[Dict[str, Any]] = None
+    warnings: List[str] = field(default_factory=list)
 
     @classmethod
     def from_file(cls, path: str) -> "JournalView":
         view = cls()
         with open(path) as f:
-            for line in f:
+            for lineno, line in enumerate(f, 1):
                 line = line.strip()
                 if not line:
                     continue
                 try:
                     ev = json.loads(line)
                 except json.JSONDecodeError:
-                    continue               # torn tail line from a kill
-                view.events.append(ev)
-                kind = ev.get("ev")
-                if kind == "start":
-                    view.start_ev = ev
-                elif kind == "end":
-                    view.end_ev = ev
-                elif kind == "point" and "key" in ev:
-                    view.points[ev["key"]] = ev
+                    view.warnings.append(
+                        f"{path}:{lineno}: skipped torn/unparseable "
+                        f"journal line ({len(line)} bytes)")
+                    continue
+                if not isinstance(ev, dict):
+                    view.warnings.append(
+                        f"{path}:{lineno}: skipped non-object journal "
+                        f"line ({type(ev).__name__})")
+                    continue
+                view.fold(ev)
         return view
+
+    def fold(self, ev: Dict[str, Any]) -> None:
+        """Fold one parsed event into the view (incremental consumers —
+        ``obs.progress`` — feed events here as they tail the file)."""
+        self.events.append(ev)
+        kind = ev.get("ev")
+        if kind == "start":
+            self.start_ev = ev
+        elif kind == "end":
+            self.end_ev = ev
+        elif kind == "point" and "key" in ev:
+            self.points[ev["key"]] = ev
 
     @property
     def summary(self) -> Dict[str, Any]:

@@ -45,6 +45,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
+from ..obs.metrics import REGISTRY
 from ..sweep.cache import atomic_write_json
 from .backend import BackendError, Progress, _cache_put
 
@@ -193,6 +194,8 @@ class Spool:
                           "worker": worker, "t_failed": time.time()})
                 os.unlink(dst)
                 continue
+            if REGISTRY.enabled:
+                REGISTRY.counter("spool.jobs_claimed").inc()
             return SpoolJob(key=key, payload=payload, active_path=dst,
                             worker=worker, t_claim=time.time(),
                             attempts=int(job_d.get("attempts", 0)))
@@ -281,6 +284,8 @@ class Spool:
                                    f"from {attempts} dead workers "
                                    f"(budget {self.retry_budget}); "
                                    f"quarantined as a poison job"})
+                if REGISTRY.enabled:
+                    REGISTRY.counter("spool.jobs_quarantined").inc()
             else:
                 # requeue with the bumped counter: publish-then-unlink
                 # so a crash in between leaves a claimable job file,
@@ -292,6 +297,8 @@ class Spool:
             except FileNotFoundError:
                 pass
             n += 1
+        if n and REGISTRY.enabled:
+            REGISTRY.counter("spool.jobs_reclaimed").inc(n)
         return n
 
 

@@ -23,6 +23,7 @@ import time
 import traceback
 from typing import Any, Callable, Dict, Optional
 
+from ..obs.metrics import REGISTRY
 from .spool import Spool, SpoolJob, worker_id
 
 __all__ = ["run_worker"]
@@ -79,12 +80,16 @@ def run_worker(root: str, *, drain: bool = True, poll_s: float = 0.5,
             stop.set()
             hb.join(timeout=hb_s + 1)
             spool.fail(job, traceback.format_exc(limit=8))
+            if REGISTRY.enabled:
+                REGISTRY.counter("worker.jobs_failed").inc()
             if log:
                 log(f"[{wid}] FAIL {job.key[:12]}")
             continue
         stop.set()
         hb.join(timeout=hb_s + 1)
         spool.complete(job, record, wall_s=time.time() - t0)
+        if REGISTRY.enabled:
+            REGISTRY.counter("worker.jobs_done").inc()
         n_done += 1
         if log:
             log(f"[{wid}] done {job.key[:12]} ({time.time() - t0:.2f}s)")

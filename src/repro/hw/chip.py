@@ -18,6 +18,7 @@ from typing import Dict, Generator, Optional, Sequence
 
 from ..core import Environment, Store, TaskRecord, Tracer
 from ..graph.tasks import BarrierScoreboard, Scheduler, Task
+from ..obs.metrics import REGISTRY
 from .dma import Dma
 from .ici import IciFabric, Router
 from .memory import Hbm, VMem
@@ -59,7 +60,9 @@ class System:
                  tracer: Optional[Tracer] = None,
                  env: Optional[Environment] = None):
         self.cfg = cfg
-        self.env = env or Environment()
+        # kernel telemetry follows the global metrics switch: the stats
+        # run-loop variant is only paid for when observability is on
+        self.env = env or Environment(stats=REGISTRY.enabled)
         self.tracer = tracer or Tracer()
         self.scoreboard = BarrierScoreboard(self.env)
         self.tiles = [Tile(self.env, cfg, self.tracer, f"tile{i}")
@@ -119,7 +122,43 @@ class System:
                      until: Optional[float] = None) -> Report:
         done = self.scheduler.run(tasks)
         self.env.run(until=done if until is None else until)
+        self.emit_metrics()
         return self.report(n_tasks=len(tasks))
+
+    def emit_metrics(self, registry=None) -> None:
+        """Flush kernel + resource-contention telemetry into a metrics
+        registry (the global one by default; no-op while disabled).
+
+        Counters are pure functions of the simulated inputs — event
+        counts, heap high-water mark, and per-resource-class stall
+        counts (a *stall* is a ``Resource.request`` that could not be
+        granted at issue time: VMEM-port, HBM-bank, DMA-channel, or
+        ICI-link contention — exactly the effects the analytic
+        relaxation cannot see)."""
+        reg = registry if registry is not None else REGISTRY
+        if not reg.enabled:
+            return
+        reg.counter("engine.events_processed").inc(
+            self.env.events_processed)
+        reg.counter("engine.events_scheduled").inc(self.env._eid)
+        reg.gauge("engine.peak_heap_depth").set_max(self.env.peak_heap)
+        reg.counter("engine.tasks_done").inc(self.scheduler.n_done)
+        reg.counter("engine.runs").inc()
+        groups = {
+            "vmem_port": [t.vmem.ports for t in self.tiles],
+            "hbm_bank": list(self.hbm.channels),
+            "dma_channel": [self.dma.channels],
+            "ici_link": [self.ici.links, self.ici.dcn],
+        }
+        for cls, resources in groups.items():
+            reqs = sum(r.n_requests for r in resources)
+            stalls = sum(r.n_stalls for r in resources)
+            if reqs:
+                reg.counter("engine.resource_requests",
+                            resource=cls).inc(reqs)
+            if stalls:
+                reg.counter("engine.resource_stalls",
+                            resource=cls).inc(stalls)
 
     def report(self, n_tasks: int = 0) -> Report:
         tr = self.tracer

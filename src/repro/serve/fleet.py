@@ -53,19 +53,25 @@ from ..core.fastsim import lower, list_schedule
 from ..graph.compiler import CompileOptions, compile_ops
 from ..graph.workloads import lm_workload_name, model_parts
 from ..hw.presets import HwConfig, from_dict
+from ..obs.metrics import REGISTRY
 from ..power.powerem import pod_power_w
 from .traffic import TraceRequest, make_trace
 
 __all__ = ["StepCost", "ServeCostModel", "FleetParams", "FleetResult",
            "simulate_fleet", "simulate_serve_point", "serve_payload",
-           "POLICIES", "SERVE_SCHEMA_VERSION"]
+           "fleet_from_payload", "POLICIES", "SERVE_SCHEMA_VERSION"]
 
 POLICIES = ("static", "continuous")
 # bumped when serve-record semantics change: lives in the payload, so
 # the result cache never serves a record computed under old semantics
-SERVE_SCHEMA_VERSION = 1
+# (v2: queue-depth-at-admission + queue-wait percentiles in records)
+SERVE_SCHEMA_VERSION = 2
 
 _PCTS = (50.0, 95.0, 99.0)
+# per-step histogram bounds: batch/queue sizes are power-of-two-ish,
+# occupancy is a fraction of the slot budget
+_BATCH_BOUNDS = tuple(float(1 << i) for i in range(11))
+_OCC_BOUNDS = (0.125, 0.25, 0.5, 0.75, 0.9, 1.0)
 
 
 def _bucket(n: int) -> int:
@@ -205,6 +211,8 @@ class _Req:
     done_ns: float = -1.0
     tokens: int = 0               # generated so far
     status: str = "queued"        # queued|active|done|evicted|rejected
+    admit_depth: int = -1         # queue backlog left behind at admission
+    replica: int = 0              # which dp replica served it
 
 
 @dataclass
@@ -258,10 +266,18 @@ class FleetResult:
             "slo_attainment": (len(good) / len(self.requests)
                                if self.requests else 0.0),
         }
-        for tag, arr in (("ttft", ttft), ("tpot", tpot)):
+        # admission detail (serve schema v2): how deep the backlog ran
+        # and how long requests queued before taking a slot
+        admitted = [r for r in self.requests if r.admit_ns >= 0]
+        depth = np.array([r.admit_depth for r in admitted], np.float64)
+        qwait = np.array([r.admit_ns - r.arrival_ns
+                          for r in admitted]) / 1e6
+        for tag, arr in (("ttft", ttft), ("tpot", tpot),
+                         ("admit_depth", depth), ("queue_wait", qwait)):
+            unit = "" if tag == "admit_depth" else "_ms"
             for p, v in zip(_PCTS, np.percentile(arr, _PCTS)
                             if len(arr) else (0.0,) * len(_PCTS)):
-                rec[f"{tag}_p{p:.0f}_ms"] = float(v)
+                rec[f"{tag}_p{p:.0f}{unit}"] = float(v)
         return rec
 
 
@@ -284,13 +300,18 @@ def _drain(batch: List[_Req], t_end: float, kv_capacity: int,
 
 
 def _run_replica(reqs: List[_Req], costs, p: FleetParams,
-                 busy: Dict[str, float]) -> Tuple[float, int, float, int]:
+                 busy: Dict[str, float], *, rep: int = 0,
+                 timeline: Optional[List[Dict[str, Any]]] = None
+                 ) -> Tuple[float, int, float, int]:
     """Simulate one replica over its (arrival-ordered) request stream.
 
     Returns ``(end_ns, steps, slot_ns, max_active)`` and accumulates
     engine-class busy time into ``busy``. Continuous policy admits into
     free slots every iteration (one fused prefill+decode step);
     static policy drains each admitted batch to completion first.
+    When ``timeline`` is given, every step appends one dict (replica,
+    window, batch composition, queue depth, resident KV tokens) — the
+    Perfetto exporter's counter-track source.
     """
     queue: deque = deque()
     active: List[_Req] = []
@@ -301,6 +322,15 @@ def _run_replica(reqs: List[_Req], costs, p: FleetParams,
     slot_ns = 0.0
     max_active = 0
     n = len(reqs)
+    # hoisted per-step instruments: zero hot-loop cost while disabled
+    reg = REGISTRY if REGISTRY.enabled else None
+    if reg is not None:
+        h_batch = reg.histogram("serve.batch_size",
+                                bounds=_BATCH_BOUNDS, replica=str(rep))
+        h_queue = reg.histogram("serve.queue_depth",
+                                bounds=_BATCH_BOUNDS, replica=str(rep))
+        h_occ = reg.histogram("serve.slot_occupancy",
+                              bounds=_OCC_BOUNDS, replica=str(rep))
 
     def pull(now: float) -> None:
         nonlocal i
@@ -334,6 +364,17 @@ def _run_replica(reqs: List[_Req], costs, p: FleetParams,
         occ = len(admitted) + len(decoding)
         slot_ns += occ * cost
         max_active = max(max_active, occ)
+        if reg is not None:
+            h_batch.observe(occ)
+            h_queue.observe(len(queue))
+            h_occ.observe(occ / p.slots)
+        if timeline is not None:
+            timeline.append({
+                "replica": rep, "t0": t, "t1": t_end,
+                "prefill": len(admitted), "decode": len(decoding),
+                "queue": len(queue),
+                "kv_tokens": sum(r.prompt + r.tokens
+                                 for r in admitted + decoding)})
         for r in admitted:
             r.status = "active"
             r.first_ns = t_end
@@ -353,6 +394,7 @@ def _run_replica(reqs: List[_Req], costs, p: FleetParams,
         while queue and len(active) + len(admitted) < p.slots:
             r = queue.popleft()
             r.admit_ns = t
+            r.admit_depth = len(queue)   # backlog left behind
             admitted.append(r)
         if p.policy == "continuous":
             step(admitted, active)
@@ -366,11 +408,15 @@ def _run_replica(reqs: List[_Req], costs, p: FleetParams,
 
 
 def simulate_fleet(trace: Sequence[TraceRequest], costs,
-                   p: FleetParams) -> FleetResult:
+                   p: FleetParams, *,
+                   timeline: Optional[List[Dict[str, Any]]] = None
+                   ) -> FleetResult:
     """Run a trace through ``p.replicas`` round-robin-balanced replicas.
 
     ``costs`` duck-types ``prefill_cost(batch, prompt)`` /
-    ``decode_cost(batch, kv)`` -> ``StepCost``.
+    ``decode_cost(batch, kv)`` -> ``StepCost``. Pass a list as
+    ``timeline`` to capture one entry per fleet step (see
+    ``_run_replica``) for the Perfetto exporter.
     """
     if not trace:
         raise ValueError("empty trace")
@@ -386,15 +432,29 @@ def simulate_fleet(trace: Sequence[TraceRequest], costs,
         shard = reqs[rep::p.replicas]
         if not shard:
             continue
-        end, st, sn, ma = _run_replica(shard, costs, p, busy)
+        for r in shard:
+            r.replica = rep
+        end, st, sn, ma = _run_replica(shard, costs, p, busy, rep=rep,
+                                       timeline=timeline)
         duration = max(duration, end)
         steps += st
         slot_ns += sn
         max_active = max(max_active, ma)
     capacity_ns = p.replicas * p.slots * duration
-    return FleetResult(requests=reqs, duration_ns=duration, steps=steps,
-                       slot_ns=slot_ns, capacity_ns=capacity_ns,
-                       max_active=max_active, busy=busy)
+    res = FleetResult(requests=reqs, duration_ns=duration, steps=steps,
+                      slot_ns=slot_ns, capacity_ns=capacity_ns,
+                      max_active=max_active, busy=busy)
+    if REGISTRY.enabled:
+        by_status: Dict[str, int] = {}
+        for r in reqs:
+            by_status[r.status] = by_status.get(r.status, 0) + 1
+        for status, cnt in sorted(by_status.items()):
+            REGISTRY.counter("serve.requests", status=status).inc(cnt)
+        REGISTRY.counter("serve.admissions").inc(
+            sum(1 for r in reqs if r.admit_ns >= 0))
+        REGISTRY.counter("serve.steps").inc(steps)
+        REGISTRY.gauge("serve.max_active").set_max(max_active)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -425,10 +485,14 @@ def serve_payload(*, workload: str, arch: str, layers: int, prompt: int,
             "temp_c": temp_c, "compile_opts": dict(compile_opts or {})}
 
 
-def simulate_serve_point(payload: Dict[str, Any]) -> Dict[str, Any]:
-    """Simulate one serve cell end to end: regenerate the trace, build
-    the cost model, run the fleet, roll up the SLO record + fleet power.
-    """
+def fleet_from_payload(payload: Dict[str, Any], *,
+                       timeline: Optional[List[Dict[str, Any]]] = None
+                       ) -> Tuple[FleetResult, FleetParams,
+                                  ServeCostModel]:
+    """Rebuild a serve cell from its payload and run the fleet loop.
+
+    Shared by ``simulate_serve_point`` (records) and the Perfetto
+    exporter (request-lifecycle spans + per-step counter tracks)."""
     cfg = from_dict(payload["hw"])
     trace = make_trace(payload["traffic"],
                        prompt_tokens=payload["prompt"],
@@ -442,7 +506,16 @@ def simulate_serve_point(payload: Dict[str, Any]) -> Dict[str, Any]:
                     kv_capacity=payload["kv_capacity"],
                     policy=payload["policy"],
                     max_queue=payload.get("max_queue", 0))
-    res = simulate_fleet(trace, costs, p)
+    res = simulate_fleet(trace, costs, p, timeline=timeline)
+    return res, p, costs
+
+
+def simulate_serve_point(payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Simulate one serve cell end to end: regenerate the trace, build
+    the cost model, run the fleet, roll up the SLO record + fleet power.
+    """
+    cfg = from_dict(payload["hw"])
+    res, p, costs = fleet_from_payload(payload)
     slo = payload["slo"]
     rec = res.record(slo_ttft_ms=slo["ttft_ms"],
                      slo_tpot_ms=slo["tpot_ms"])

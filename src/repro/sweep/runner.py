@@ -35,6 +35,7 @@ import numpy as np
 from ..exec.backend import Backend, canonical as _canon, get_backend
 from ..exec.journal import CampaignJournal
 from ..hw.presets import to_dict
+from ..obs.metrics import REGISTRY
 from ..serve.fleet import serve_payload
 from .cache import ResultCache, content_key
 from .pareto import select_points
@@ -279,6 +280,11 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         for i, rec in zip(misses, fresh):
             results[i] = _canon(rec)
     refine_s = time.time() - t0
+    if REGISTRY.enabled:
+        REGISTRY.counter("runner.cache_hits", backend=bk.name
+                         ).inc(cache_hits)
+        REGISTRY.counter("runner.cache_misses", backend=bk.name
+                         ).inc(len(misses))
 
     deviations = []
     for i, res in enumerate(results):
@@ -333,5 +339,10 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         journal.end({k: summary[k] for k in
                      ("grid_points", "refined", "cache_hits", "simulated",
                       "backend", "wall_s")})
+        # the same fold that powers `exec status --watch`: phase rates,
+        # per-worker totals, ETA (0 — the campaign just finished)
+        from ..obs.progress import CampaignProgress
+        summary["progress"] = CampaignProgress.from_file(
+            journal.path).summary()
     return CampaignResult(spec=spec.to_dict(), records=records,
                           summary=summary)

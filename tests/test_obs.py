@@ -1,0 +1,432 @@
+"""Observability subsystem tests (ISSUE 7).
+
+Covers the three obs planes plus their satellites:
+
+* metrics registry semantics (counters/gauges/histograms, labels,
+  deterministic snapshots) and the instrumentation hooks in the event
+  engine, fast engine, serving fleet, and exec backends;
+* Perfetto exporter: golden JSON fixtures for a small event-sim point
+  and a serve point (regenerate with ``--update-golden``), schema
+  validation (pid/tid/ts/dur, monotone counter tracks), and the
+  campaign-journal worker lanes;
+* live progress: torn-line-safe journal tailing, the throughput/ETA
+  fold, the ``exec status`` CLI, and the ``progress`` block in campaign
+  summaries.
+"""
+import json
+import os
+
+import pytest
+
+from repro.exec.journal import CampaignJournal, JournalView
+from repro.hw.presets import resolve_preset, to_dict
+from repro.obs.metrics import MetricsRegistry, REGISTRY, collecting, \
+    render_table
+from repro.obs.perfetto import trace_campaign_journal, trace_event_point, \
+    trace_serve_point, write_trace
+from repro.obs.progress import CampaignProgress, JournalFollower, \
+    render_progress
+from repro.serve.fleet import FleetParams, StepCost, serve_payload, \
+    simulate_fleet, simulate_serve_point
+from repro.serve.traffic import TraceRequest
+from repro.sweep.refine import refine_payload
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _event_payload():
+    return refine_payload(
+        workload="tiny_yolo_v2", n_tiles=1,
+        hw=to_dict(resolve_preset("v5e")), compile_opts={},
+        pti_ns=100_000.0, temp_c=60.0, keep_series=False)
+
+
+def _serve_payload():
+    return serve_payload(
+        workload="serve/golden", arch="qwen3-32b", layers=1, prompt=64,
+        max_new=8, tp=1, ep=1, dp=2, pod=0, slots=4, kv_capacity=128,
+        policy="continuous",
+        traffic={"kind": "poisson", "rate_rps": 100.0, "n_requests": 24,
+                 "seed": 3},
+        slo={"ttft_ms": 500.0, "tpot_ms": 50.0},
+        n_tiles=1, hw=to_dict(resolve_preset("v5e")), temp_c=60.0)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+
+
+def test_registry_instruments_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("jobs", state="done").inc()
+    reg.counter("jobs", state="done").inc(2)
+    reg.gauge("depth").set(3)
+    reg.gauge("depth").set_max(1)          # keeps the high-water mark
+    h = reg.histogram("wait", bounds=(1.0, 2.0))
+    for v in (0.5, 1.5, 9.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["counters"]["jobs{state=done}"] == 3
+    assert snap["gauges"]["depth"] == 3
+    hs = snap["histograms"]["wait"]
+    assert hs["count"] == 3 and hs["overflow"] == 1
+    assert hs["buckets"] == {"le_1": 1, "le_2": 1}
+    assert hs["min"] == 0.5 and hs["max"] == 9.0
+    # label order never matters: same instrument either way
+    assert reg.counter("x", a=1, b=2) is reg.counter("x", b=2, a=1)
+    assert any(line.startswith("counter,jobs{state=done},3")
+               for line in render_table(snap))
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+
+
+def test_global_registry_disabled_records_nothing():
+    from repro.hw.chip import System
+    from repro.graph.compiler import CompileOptions, compile_ops
+    from repro.graph.workloads import resolve_workload
+
+    assert not REGISTRY.enabled      # the off-by-default contract
+    cfg = resolve_preset("v5e")
+    cw = compile_ops(resolve_workload("tiny_yolo_v2")(), cfg,
+                     CompileOptions(n_tiles=1))
+    before = json.dumps(REGISTRY.snapshot(), sort_keys=True)
+    System(cfg, n_tiles=1).run_workload(cw.tasks)
+    assert json.dumps(REGISTRY.snapshot(), sort_keys=True) == before
+
+
+def test_engine_metrics_flow_when_collecting():
+    from repro.hw.chip import System
+    from repro.graph.compiler import CompileOptions, compile_ops
+    from repro.graph.workloads import resolve_workload
+
+    cfg = resolve_preset("v5e")
+    cw = compile_ops(resolve_workload("tiny_yolo_v2")(), cfg,
+                     CompileOptions(n_tiles=1))
+    with collecting() as reg:
+        sysm = System(cfg, n_tiles=1)
+        sysm.run_workload(cw.tasks)
+        snap = reg.snapshot()
+    c = snap["counters"]
+    assert c["engine.events_processed"] == sysm.env.events_processed > 0
+    assert c["engine.tasks_done"] == len(cw.tasks)
+    assert snap["gauges"]["engine.peak_heap_depth"] >= 1
+    assert any(k.startswith("engine.resource_requests") for k in c)
+
+
+@pytest.mark.parametrize("maker", [_event_payload, _serve_payload],
+                         ids=["event", "serve"])
+def test_metrics_snapshot_deterministic(maker):
+    """Equal inputs -> byte-identical snapshots, run after run."""
+    from repro.sweep.refine import refine_point
+
+    snaps = []
+    for _ in range(2):
+        with collecting() as reg:
+            refine_point(maker())
+            snaps.append(reg.snapshot_json())
+    assert snaps[0] == snaps[1]
+    assert json.loads(snaps[0])["counters"]      # actually instrumented
+
+
+def test_fastsim_fallback_metrics():
+    from repro.core.fastsim import simulate_fast
+    from repro.graph.compiler import CompileOptions, compile_ops
+    from repro.graph.workloads import resolve_workload
+
+    cfg = resolve_preset("v5e")
+    cw = compile_ops(resolve_workload("lm/qwen3-32b/s64b1tp1")(), cfg,
+                     CompileOptions(n_tiles=1))
+    with collecting() as reg:
+        run = simulate_fast(cw, cfg, n_tiles=1, reduced=())
+        c = reg.snapshot()["counters"]
+    assert not run.extrapolated
+    assert c["fastsim.full_replay{reason=no_reduced_workload}"] == 1
+    # the replay routes through the instrumented engine too
+    assert c["engine.events_processed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# serving fleet: admit-depth satellite + instrumentation
+
+
+class _FlatCosts:
+    def prefill_cost(self, batch, prompt):
+        return StepCost(ns=100.0, busy={"mxu": 50.0})
+
+    def decode_cost(self, batch, kv):
+        return StepCost(ns=10.0, busy={"mxu": 5.0})
+
+
+def _burst_trace(n, spacing_ns=0.0):
+    return [TraceRequest(arrival_ns=i * spacing_ns, prompt_tokens=8,
+                         max_new=4) for i in range(n)]
+
+
+def test_admit_depth_and_queue_wait_recorded():
+    p = FleetParams(replicas=1, slots=2, kv_capacity=64,
+                    policy="continuous")
+    res = simulate_fleet(_burst_trace(8), _FlatCosts(), p)
+    admitted = [r for r in res.requests if r.admit_ns >= 0]
+    assert admitted and all(r.admit_depth >= 0 for r in admitted)
+    # 8 simultaneous arrivals into 2 slots: the first batch leaves 6
+    # queued behind it, so *some* request saw a deep backlog
+    assert max(r.admit_depth for r in admitted) >= 4
+    rec = res.record(slo_ttft_ms=1e9, slo_tpot_ms=1e9)
+    for k in ("admit_depth_p50", "admit_depth_p95", "admit_depth_p99",
+              "queue_wait_p50_ms", "queue_wait_p95_ms",
+              "queue_wait_p99_ms"):
+        assert k in rec
+    assert rec["admit_depth_p99"] >= rec["admit_depth_p50"] >= 0
+    assert rec["queue_wait_p99_ms"] >= 0
+
+
+def test_fleet_metrics_and_timeline():
+    p = FleetParams(replicas=2, slots=2, kv_capacity=64,
+                    policy="continuous")
+    timeline = []
+    with collecting() as reg:
+        simulate_fleet(_burst_trace(8), _FlatCosts(), p,
+                       timeline=timeline)
+        snap = reg.snapshot()
+    assert snap["counters"]["serve.requests{status=done}"] == 8
+    assert snap["counters"]["serve.admissions"] == 8
+    assert snap["counters"]["serve.steps"] > 0
+    assert any(k.startswith("serve.batch_size")
+               for k in snap["histograms"])
+    assert timeline and all(
+        set(t) == {"replica", "t0", "t1", "prefill", "decode", "queue",
+                   "kv_tokens"} for t in timeline)
+    # per-replica step windows are time-ordered (the counter-track
+    # monotonicity the Perfetto exporter relies on)
+    for rep in (0, 1):
+        ts = [t["t0"] for t in timeline if t["replica"] == rep]
+        assert ts == sorted(ts)
+
+
+def test_serve_schema_v2_record_keys():
+    rec = simulate_serve_point(_serve_payload())
+    assert "admit_depth_p50" in rec and "queue_wait_p95_ms" in rec
+    assert _serve_payload()["serve_schema"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Perfetto exporter
+
+
+def _validate_trace(trace):
+    assert set(trace) == {"traceEvents", "displayTimeUnit"}
+    named_pids = set()
+    last_counter = {}
+    for ev in trace["traceEvents"]:
+        assert isinstance(ev["pid"], int) and ev["pid"] >= 1
+        assert isinstance(ev["name"], str) and ev["name"]
+        if ev["ph"] == "M":
+            assert ev["name"] == "process_name"
+            named_pids.add(ev["pid"])
+            continue
+        assert ev["pid"] in named_pids    # metadata precedes use
+        assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0
+        if ev["ph"] == "X":
+            assert "tid" in ev and ev["dur"] > 0
+        elif ev["ph"] == "C":
+            assert all(isinstance(v, (int, float))
+                       for v in ev["args"].values())
+            k = (ev["pid"], ev["name"])
+            assert ev["ts"] >= last_counter.get(k, -1.0), \
+                f"counter track {k} not monotone"
+            last_counter[k] = ev["ts"]
+        else:
+            assert ev["ph"] == "i"
+    assert last_counter, "expected at least one counter track"
+
+
+def _freeze_trace(trace):
+    def rnd(o):
+        if isinstance(o, float):
+            return float(f"{o:.10g}")
+        if isinstance(o, dict):
+            return {k: rnd(v) for k, v in sorted(o.items())}
+        if isinstance(o, list):
+            return [rnd(v) for v in o]
+        return o
+
+    return rnd(json.loads(json.dumps(trace, default=float)))
+
+
+@pytest.mark.parametrize("name,build", [
+    ("perfetto_event_point", lambda: trace_event_point(_event_payload())),
+    ("perfetto_serve_point", lambda: trace_serve_point(_serve_payload())),
+])
+def test_perfetto_golden(name, build, request):
+    trace = build()
+    _validate_trace(trace)
+    frozen = _freeze_trace(trace)
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    if request.config.getoption("--update-golden"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(frozen, f, sort_keys=True)
+            f.write("\n")
+        return
+    assert os.path.exists(path), (
+        f"missing golden fixture {path}; generate it with "
+        f"`python -m pytest tests/test_obs.py --update-golden`")
+    with open(path) as f:
+        golden = json.load(f)
+    assert frozen == golden, (
+        f"Perfetto trace for {name} drifted from tests/golden/; if the "
+        f"change is intended, rerun with --update-golden and commit")
+
+
+def _write_journal(path, *, end=True):
+    j = CampaignJournal(path)
+    j.start(campaign="camp", backend="spool", grid_points=4, to_refine=4)
+    j.point("a" * 16, "done", worker="w1", wall_s=0.4)
+    j.point("b" * 16, "cached")
+    j.point("c" * 16, "done", worker="w2", wall_s=0.6)
+    j.point("d" * 16, "failed", worker="w2", error="boom")
+    if end:
+        j.end({"wall_s": 2.0})
+    return path
+
+
+def test_perfetto_campaign_journal(tmp_path):
+    path = _write_journal(str(tmp_path / "j.jsonl"))
+    trace = trace_campaign_journal(path)
+    evs = trace["traceEvents"]
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert {e["tid"] for e in spans} == {"w1", "w2"}   # worker lanes
+    assert all(e["dur"] > 0 and e["ts"] >= 0 for e in spans)
+    insts = [e for e in evs if e["ph"] == "i"]
+    assert any(e["name"].startswith("cached:") for e in insts)
+    assert any(e["name"].startswith("failed:") for e in insts)
+    out = write_trace(trace, str(tmp_path / "t.json"))
+    with open(out) as f:
+        assert json.load(f) == json.loads(json.dumps(trace))
+
+
+# ---------------------------------------------------------------------------
+# journal hardening + live progress
+
+
+def test_journal_view_warns_on_torn_lines(tmp_path):
+    path = _write_journal(str(tmp_path / "j.jsonl"))
+    with open(path, "a") as f:
+        f.write('["not", "an", "object"]\n')
+        f.write('{"ev": "point", "key": "trunc')    # killed mid-write
+    view = JournalView.from_file(path)
+    assert len(view.warnings) == 2
+    assert all("skipped" in w for w in view.warnings)
+    c = view.counts()                               # fold unaffected
+    assert c["total"] == 4 and c["done"] == 2 and c["failed"] == 1
+    assert view.all_done() is False
+
+
+def test_journal_follower_consumes_complete_lines_only(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = CampaignJournal(path)
+    j.start(campaign="c", backend="inline", grid_points=1, to_refine=1)
+    fo = JournalFollower(path)
+    assert [e["ev"] for e in fo.poll()] == ["start"]
+    with open(path, "a") as f:                      # torn write...
+        f.write('{"ev": "point", "key": "kk", "status": "do')
+    assert fo.poll() == []                          # ...not consumed
+    with open(path, "a") as f:                      # ...then finished
+        f.write('ne", "t": 5.0}\n')
+    evs = fo.poll()
+    assert len(evs) == 1 and evs[0]["status"] == "done"
+    assert fo.poll() == [] and not fo.warnings
+
+
+def test_progress_fold_throughput_and_eta():
+    prog = CampaignProgress()
+    prog.feed({"ev": "start", "t": 100.0, "campaign": "c",
+               "backend": "spool", "grid_points": 8, "to_refine": 6})
+    prog.feed({"ev": "point", "t": 100.0, "key": "k0",
+               "status": "cached"})
+    for i, t in enumerate((105.0, 110.0)):
+        prog.feed({"ev": "point", "t": t, "key": f"k{i + 1}",
+                   "status": "done", "worker": "w1", "wall_s": 5.0})
+    s = prog.summary()
+    assert s["resolved"] == 3 and s["remaining"] == 3
+    assert not s["finished"]
+    assert s["sim_points_per_s"] == pytest.approx(0.2)   # 2 in 10s
+    assert s["eta_s"] == pytest.approx(15.0)             # 3 / 0.2
+    assert s["workers"]["w1"]["points"] == 2
+    assert s["workers"]["w1"]["alive"] is True
+    # liveness ages against an explicit clock (the --watch path)
+    stale = prog.summary(now=110.0 + 10_000.0)
+    assert stale["workers"]["w1"]["alive"] is False
+    assert any("3/6 resolved" in ln for ln in render_progress(s))
+
+
+def test_runner_summary_progress_block(tmp_path):
+    from repro.sweep import RefineSpec, SweepSpec
+    from repro.sweep.runner import run_campaign
+
+    spec = SweepSpec(
+        name="obs_progress_slice",
+        workloads=["mobilenet_v2"],
+        preset="paper_skew",
+        axes={"clock_ghz": [0.5, 1.0]},
+        n_tiles=[1],
+        refine=RefineSpec(mode="all"))
+    res = run_campaign(spec, backend="inline", use_cache=False,
+                       journal_path=str(tmp_path / "j.jsonl"))
+    prog = res.summary["progress"]
+    assert prog["finished"] is True and prog["eta_s"] == 0.0
+    assert prog["resolved"] == res.summary["refined"]
+    assert prog["simulated"] == res.summary["simulated"]
+    assert prog["backend"] == "inline"
+
+
+# ---------------------------------------------------------------------------
+# CLIs
+
+
+def test_exec_status_cli_journal_and_spool(tmp_path, capsys):
+    from repro.exec.__main__ import main as exec_main
+
+    path = _write_journal(str(tmp_path / "j.jsonl"))
+    assert exec_main(["status", path]) == 0
+    out = capsys.readouterr().out
+    assert "camp" in out and "resolved" in out
+
+    spool_dir = str(tmp_path / "spool")
+    from repro.exec.spool import Spool
+    Spool(spool_dir).submit("k1", {"x": 1})
+    assert exec_main(["status", spool_dir]) == 0
+    assert "jobs,1" in capsys.readouterr().out
+
+
+def test_exec_journal_cli_prints_warnings(tmp_path, capsys):
+    from repro.exec.__main__ import main as exec_main
+
+    path = _write_journal(str(tmp_path / "j.jsonl"))
+    with open(path, "a") as f:
+        f.write('{"torn')
+    assert exec_main(["journal", path]) == 0
+    cap = capsys.readouterr()
+    assert "skipped" in cap.err and "total,4" in cap.out
+
+
+def test_obs_trace_cli(tmp_path, capsys):
+    from repro.obs.__main__ import main as obs_main
+
+    # payload file -> serve exporter
+    pfile = str(tmp_path / "point.json")
+    with open(pfile, "w") as f:
+        json.dump(_serve_payload(), f)
+    out = str(tmp_path / "trace.json")
+    assert obs_main(["trace", pfile, "-o", out]) == 0
+    assert "serve-point" in capsys.readouterr().out
+    with open(out) as f:
+        _validate_trace(json.load(f))
+
+    # journal -> worker lanes
+    jpath = _write_journal(str(tmp_path / "j.jsonl"))
+    out2 = str(tmp_path / "trace2.json")
+    assert obs_main(["trace", jpath, "-o", out2]) == 0
+    with open(out2) as f:
+        assert json.load(f)["traceEvents"]
