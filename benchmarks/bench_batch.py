@@ -1,0 +1,115 @@
+"""Batched cross-point refinement gate: sharing must actually pay.
+
+Refines an ``lm_full_pod`` slice — the three full-model depths
+(L16/L32/L64) of the ``s1024b8tp4pod8`` prefill point crossed with the
+campaign's three DCN rates — twice: per point (``refine_point`` in a
+loop, the pre-ISSUE-8 path) and as one batch job
+(``refine_batch``). The slice exercises every sharing tier at once:
+the DCN axis is *dead* at tp4/pod8 (rings stay inside the pod), so
+each structural class collapses its three DCN variants into one
+simulation, and the three classes share their reduced-twin event
+replays through the batch-wide memo.
+
+Gates:
+
+* records bitwise identical between the two paths (the differential
+  contract — also locked more broadly by ``tests/test_batchsim.py``);
+* batched wall time at least ``--min-speedup`` (3x, the ISSUE 8
+  acceptance floor; measured ~7x locally) better than per-point.
+
+Run:  PYTHONPATH=src python benchmarks/bench_batch.py [--out PATH]
+          [--repeats N] [--min-speedup X]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.hw.presets import resolve_preset, to_dict
+from repro.sweep.refine import batch_payload, refine_payload, refine_point
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO, "BENCH_batch.json")
+
+LAYERS = (16, 32, 64)
+# lm_full_pod's dcn_gbps axis — dead for this pod shape, so each
+# layer-class shares one simulation across all three rates
+DCN_GBPS = (6.25, 25.0, 100.0)
+PTI_NS = 1_000_000.0
+
+
+def _payloads() -> list:
+    hw = to_dict(resolve_preset("v5e"))
+    out = []
+    for layers in LAYERS:
+        for dcn in DCN_GBPS:
+            out.append(refine_payload(
+                workload=f"lm/qwen3-32b/L{layers}/s1024b8tp4pod8",
+                n_tiles=2, hw=dict(hw, dcn_gbps=dcn), compile_opts={},
+                pti_ns=PTI_NS, temp_c=60.0, keep_series=False,
+                engine="fast"))
+    return out
+
+
+def _time(fn, repeats: int) -> tuple:
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.time()
+        out = fn()
+        best = min(best, time.time() - t0)
+    return best, out
+
+
+def run(out_path: str = DEFAULT_OUT, *, repeats: int = 2,
+        min_speedup: float = 3.0) -> dict:
+    items = _payloads()
+    solo_s, solo = _time(lambda: [refine_point(p) for p in _payloads()],
+                         repeats)
+    batch_s, br = _time(lambda: refine_point(batch_payload(_payloads())),
+                        repeats)
+    identical = all(
+        json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+        for a, b in zip(solo, br["records"]))
+    speedup = solo_s / batch_s if batch_s > 0 else float("inf")
+    out = {
+        "points": len(items),
+        "layers": list(LAYERS),
+        "dcn_gbps": list(DCN_GBPS),
+        "repeats": repeats,
+        "per_point_wall_s": solo_s,
+        "batched_wall_s": batch_s,
+        "speedup": speedup,
+        "min_speedup": min_speedup,
+        "records_bitwise_identical": identical,
+        "pass": identical and speedup >= min_speedup,
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"{len(items)} points: per-point {solo_s:.2f}s  "
+          f"batched {batch_s:.2f}s  speedup {speedup:.1f}x "
+          f"(gate {min_speedup:.0f}x)  bitwise={identical}  -> {out_path}")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="min-of-N wall time per mode (damps CI noise)")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="fail below this batched-vs-per-point speedup")
+    args = ap.parse_args()
+    out = run(args.out, repeats=args.repeats, min_speedup=args.min_speedup)
+    if not out["pass"]:
+        print(f"FAIL: speedup {out['speedup']:.2f}x < "
+              f"{args.min_speedup}x or records drifted "
+              f"(bitwise={out['records_bitwise_identical']})")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

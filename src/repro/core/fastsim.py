@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -62,6 +62,8 @@ from .trace import SampleArrays
 
 __all__ = ["TaskTable", "lower", "list_schedule", "FastRun",
            "simulate_fast", "try_extrapolate", "replay_intervals",
+           "BlockMatch", "VerifiedReplay", "match_blocks",
+           "verify_replay", "splice",
            "FAST_REPLAY_LAYERS", "FAST_REPLAY_LAYERS_BY_PHASE",
            "FAST_MIN_LAYERS", "FAST_PATTERN_ATOL_NS"]
 
@@ -326,14 +328,52 @@ def _full_replay(tasks: Sequence[Task], cfg: HwConfig, n_tiles: int,
                    replayed_tasks=len(tasks), detail={"fallback": reason})
 
 
-def try_extrapolate(full: CompiledWorkload, cfg: HwConfig, *,
-                    n_tiles: int, reduced: CompiledWorkload
-                    ) -> Tuple[Optional[FastRun], str]:
-    """One steady-state extrapolation attempt against one reduced twin.
+@dataclass
+class BlockMatch:
+    """Config-independent structural match of a full model against one
+    reduced twin: the full model's block layout plus the tail payloads
+    that must be patched in closed form after splicing. Pure graph
+    structure — valid for every hardware config the pair compiles under
+    (``graph.compiler`` output is invariant along the analytic axes)."""
 
-    Returns ``(run, "")`` on lock-in, ``(None, reason)`` otherwise —
-    the caller decides whether to try a deeper twin or fall back to an
-    exact full replay (``simulate_fast`` runs that ladder).
+    f_blocks: List[slice]         # full model's L<i> block slices
+    f_tail: slice                 # full model's trailing (head) tasks
+    n_extra: int                  # layers to synthesize (L - R)
+    patches: List[Tuple[int, CollectiveSpec]]   # tail pos -> payload
+    layers: int                   # L
+    reduced_layers: int           # R
+
+
+@dataclass
+class VerifiedReplay:
+    """One reduced twin replayed on the event engine and steady-state
+    verified at one hardware config — the shareable unit of the batched
+    refinement path (``core.batchsim``): every full model whose blocks
+    structurally match this twin splices from the same verified replay,
+    so a batch of campaign points pays for the event engine once."""
+
+    n_tasks: int                  # twin task count (FastRun accounting)
+    start: np.ndarray             # [n_tasks] exact twin task starts
+    end: np.ndarray
+    samples: SampleArrays         # twin activity-sample stream
+    blocks: List[slice]           # twin L<i> block slices
+    tail: slice
+    q: int                        # steady block index (last interior)
+    delta: float                  # measured steady-state period (ns)
+    drift: float                  # task-pattern lock-in drift (ns)
+    sdrift: float                 # sample-window lock-in drift (ns)
+    win: np.ndarray               # bool mask: the captured steady window
+    w1: float                     # window end (the period cut)
+
+
+def match_blocks(full: CompiledWorkload, reduced: CompiledWorkload
+                 ) -> Tuple[Optional[BlockMatch], str]:
+    """Structural half of an extrapolation attempt (no simulation).
+
+    Verifies both task lists split into regular ``L<i>`` blocks, every
+    block carries the same structural signature, and the tails agree up
+    to closed-form-patchable collectives. Returns ``(match, "")`` or
+    ``(None, reason)``.
     """
     tasks = full.tasks
     fb = _block_slices(tasks)
@@ -369,6 +409,26 @@ def try_extrapolate(full: CompiledWorkload, cfg: HwConfig, *,
                     and k == len(f_tail_tasks) - 1):
                 return None, "unpatchable tail payload"
             patches.append((k, ft.payload))
+    return BlockMatch(f_blocks=f_blocks, f_tail=f_tail, n_extra=n_extra,
+                      patches=patches, layers=L, reduced_layers=R), ""
+
+
+def verify_replay(reduced: CompiledWorkload, cfg: HwConfig, *,
+                  n_tiles: int) -> Tuple[Optional[VerifiedReplay], str]:
+    """Replay one reduced twin exactly and verify its steady state.
+
+    Depends only on ``(reduced, cfg, n_tiles)`` — never on the full
+    model — so the result is memoizable and shareable across every
+    campaign point whose graph matches the twin (``match_blocks``) at a
+    config that replays identically (``batchsim.dead_axes``).
+    """
+    rb = _block_slices(reduced.tasks)
+    if rb is None:
+        return None, "irregular layer blocks"
+    r_blocks, r_tail = rb
+    R = len(r_blocks)
+    if R < 4:
+        return None, f"too few replay layers (R={R})"
 
     # -- exact replay of the reduced model --------------------------------
     r_start, r_end, r_sa = replay_intervals(reduced.tasks, cfg,
@@ -432,6 +492,23 @@ def try_extrapolate(full: CompiledWorkload, cfg: HwConfig, *,
                  float(np.abs(cw_t1 - cp_t1).max(initial=0)))
     if sdrift > FAST_PATTERN_ATOL_NS:
         return None, f"sample time drift {sdrift:.3g} ns"
+    return VerifiedReplay(n_tasks=len(reduced.tasks), start=r_start,
+                          end=r_end, samples=r_sa, blocks=r_blocks,
+                          tail=r_tail, q=q, delta=delta, drift=drift,
+                          sdrift=sdrift, win=win, w1=w1), ""
+
+
+def splice(full: CompiledWorkload, match: BlockMatch, vr: VerifiedReplay,
+           cfg: HwConfig) -> Tuple[Optional[FastRun], str]:
+    """Synthesize the full model's intervals/samples from a verified
+    twin replay (O(1) per extra layer). Never mutates ``vr`` — the same
+    verified replay splices any number of campaign points."""
+    tasks = full.tasks
+    f_blocks, f_tail = match.f_blocks, match.f_tail
+    n_extra, patches = match.n_extra, match.patches
+    r_blocks, r_tail = vr.blocks, vr.tail
+    r_start, r_end, r_sa = vr.start, vr.end, vr.samples
+    q, delta, win, w1 = vr.q, vr.delta, vr.win, vr.w1
 
     # -- splice task intervals --------------------------------------------
     n_full = len(tasks)
@@ -504,11 +581,33 @@ def try_extrapolate(full: CompiledWorkload, cfg: HwConfig, *,
     return FastRun(tasks=list(tasks), start=start, end=end, samples=sa,
                    makespan_ns=sa.makespan(),
                    extrapolated=True,
-                   replayed_tasks=len(reduced.tasks),
-                   detail={"layers": L, "replayed_layers": R,
-                           "period_ns": delta, "task_drift_ns": drift,
-                           "sample_drift_ns": sdrift,
+                   replayed_tasks=vr.n_tasks,
+                   detail={"layers": match.layers,
+                           "replayed_layers": match.reduced_layers,
+                           "period_ns": delta, "task_drift_ns": vr.drift,
+                           "sample_drift_ns": vr.sdrift,
                            "patched_tail": len(patches)}), ""
+
+
+def try_extrapolate(full: CompiledWorkload, cfg: HwConfig, *,
+                    n_tiles: int, reduced: CompiledWorkload
+                    ) -> Tuple[Optional[FastRun], str]:
+    """One steady-state extrapolation attempt against one reduced twin.
+
+    Composition of the three reusable stages — ``match_blocks`` (pure
+    structure), ``verify_replay`` (one event-engine twin replay +
+    steady-state lock-in), ``splice`` (O(1)/layer synthesis). Returns
+    ``(run, "")`` on lock-in, ``(None, reason)`` otherwise — the caller
+    decides whether to try a deeper twin or fall back to an exact full
+    replay (``simulate_fast`` runs that ladder).
+    """
+    match, reason = match_blocks(full, reduced)
+    if match is None:
+        return None, reason
+    vr, reason = verify_replay(reduced, cfg, n_tiles=n_tiles)
+    if vr is None:
+        return None, reason
+    return splice(full, match, vr, cfg)
 
 
 def _reason_class(reasons: Sequence[str], extrapolate: bool) -> str:
@@ -524,7 +623,10 @@ def _reason_class(reasons: Sequence[str], extrapolate: bool) -> str:
 
 def simulate_fast(full: CompiledWorkload, cfg: HwConfig, *, n_tiles: int,
                   reduced: Sequence[CompiledWorkload] = (),
-                  extrapolate: bool = True) -> FastRun:
+                  extrapolate: bool = True,
+                  verify: Optional[Callable[[CompiledWorkload],
+                                            Tuple[Optional[VerifiedReplay],
+                                                  str]]] = None) -> FastRun:
     """Fast-engine simulation of ``full``.
 
     ``reduced`` is a ladder of compiled reduced-layer twins (same
@@ -533,12 +635,25 @@ def simulate_fast(full: CompiledWorkload, cfg: HwConfig, *, n_tiles: int,
     attempt that fails lock-in retries deeper). Without candidates, or
     when every attempt fails its steady-state checks, this is an exact
     full replay, bit-identical to the event engine.
+
+    ``verify`` overrides how a twin gets its ``VerifiedReplay`` — the
+    batched refinement path (``core.batchsim``) passes a memoizing
+    closure here so one event-engine twin replay serves every campaign
+    point in a structural class. Default: fresh ``verify_replay`` per
+    attempt (identical behavior, replay just isn't shared).
     """
+    if verify is None:
+        def verify(rcw: CompiledWorkload):
+            return verify_replay(rcw, cfg, n_tiles=n_tiles)
     reasons: List[str] = []
     if extrapolate:
         for rw in reduced:
-            run, reason = try_extrapolate(full, cfg, n_tiles=n_tiles,
-                                          reduced=rw)
+            run = None
+            match, reason = match_blocks(full, rw)
+            if match is not None:
+                vr, reason = verify(rw)
+                if vr is not None:
+                    run, reason = splice(full, match, vr, cfg)
             if run is not None:
                 if reasons:
                     run.detail["retried"] = reasons

@@ -49,7 +49,7 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, \
     runtime_checkable
 
 __all__ = ["Backend", "BackendError", "InlineBackend", "get_backend",
-           "BACKEND_NAMES"]
+           "BACKEND_NAMES", "is_batch_record"]
 
 BACKEND_NAMES = ("inline", "pool", "spool")
 
@@ -86,8 +86,24 @@ class Backend(Protocol):
         ...
 
 
+def is_batch_record(rec: Record) -> bool:
+    """A batch-job result (``sweep.refine.refine_batch``): per-item
+    records plus their own content keys. Backends expand it into
+    per-point cache entries and journal events so batching stays
+    invisible to the cache, the journal, and resumed campaigns."""
+    return rec.get("kind") == "batch" and "records" in rec and "keys" in rec
+
+
 def _cache_put(cache, key: Optional[str], rec: Record) -> None:
-    if cache is not None and key is not None:
+    if cache is None:
+        return
+    if is_batch_record(rec):
+        # per-point write-through under each item's own key — never
+        # under the batch-job key, so unbatched reruns hit the cache
+        for sub_key, sub in zip(rec["keys"], rec["records"]):
+            cache.put(sub_key, canonical(sub))
+        return
+    if key is not None:
         cache.put(key, canonical(rec))
 
 
@@ -101,8 +117,21 @@ def canonical(rec: Record) -> Record:
 
 
 def _journal_done(journal, key: Optional[str], *, worker: str,
-                  wall_s: Optional[float]) -> None:
-    if journal is not None and key is not None:
+                  wall_s: Optional[float],
+                  rec: Optional[Record] = None) -> None:
+    if journal is None:
+        return
+    if rec is not None and is_batch_record(rec):
+        # one "done" event per point (the journal's unit is the point,
+        # whatever the dispatch unit was); the job's wall time is split
+        # evenly — per-point attribution inside a shared simulation is
+        # not meaningful
+        per = (wall_s / len(rec["keys"])
+               if wall_s is not None and rec["keys"] else wall_s)
+        for sub_key in rec["keys"]:
+            journal.point(sub_key, "done", worker=worker, wall_s=per)
+        return
+    if key is not None:
         journal.point(key, "done", worker=worker, wall_s=wall_s)
 
 
@@ -125,7 +154,7 @@ class InlineBackend:
             rec = refine_point(payload)
             _cache_put(cache, key, rec)
             _journal_done(journal, key, worker="inline",
-                          wall_s=time.time() - t0)
+                          wall_s=time.time() - t0, rec=rec)
             out.append(rec)
         return out
 

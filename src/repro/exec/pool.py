@@ -81,7 +81,9 @@ class PoolBackend:
                 _cache_put(cache, key, rec)
                 fresh.append(rec)
         # pool.map gives no per-point timing; journal the batch average
+        # (batch-job records expand to per-point events inside)
         avg = (time.time() - t0) / max(len(payloads), 1)
-        for key in keys:
-            _journal_done(journal, key, worker=self.name, wall_s=avg)
+        for key, rec in zip(keys, fresh):
+            _journal_done(journal, key, worker=self.name, wall_s=avg,
+                          rec=rec)
         return fresh

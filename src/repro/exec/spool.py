@@ -47,7 +47,7 @@ from typing import Any, Dict, List, Optional
 
 from ..obs.metrics import REGISTRY
 from ..sweep.cache import atomic_write_json
-from .backend import BackendError, Progress, _cache_put
+from .backend import BackendError, Progress, _cache_put, _journal_done
 
 __all__ = ["Spool", "SpoolJob", "SpoolBackend", "DEFAULT_LEASE_S",
            "DEFAULT_RETRY_BUDGET", "worker_id"]
@@ -373,9 +373,11 @@ class SpoolBackend:
                         # dies before the batch completes
                         _cache_put(cache, key, res["record"])
                     if journal is not None and key not in journaled:
-                        journal.point(key, "done",
+                        # batch-job records expand to per-point events
+                        _journal_done(journal, key,
                                       worker=res.get("worker"),
-                                      wall_s=res.get("wall_s"))
+                                      wall_s=res.get("wall_s"),
+                                      rec=res["record"])
                         journaled.add(key)
                 for key in sorted(pending & spool.failed_keys()):
                     fail = spool.failure(key)

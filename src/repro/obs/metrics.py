@@ -1,7 +1,9 @@
 """Zero-dependency metrics registry — the observability data plane.
 
-Every instrumented subsystem (event engine, fast engine, serving fleet,
-exec backends) records into a ``MetricsRegistry``: counters, gauges, and
+Every instrumented subsystem (event engine, fast engine, batched
+refinement — structural-class sizes, shared-vs-fallback point counts,
+twin-replay memo hit rate under ``batch.*`` — serving fleet, exec
+backends) records into a ``MetricsRegistry``: counters, gauges, and
 fixed-bucket histograms, each addressable by name + sorted label pairs.
 Two contracts make this a subsystem instead of scattered prints:
 

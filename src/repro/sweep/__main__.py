@@ -55,6 +55,11 @@ def cmd_run(args: argparse.Namespace) -> int:
         spec.refine.mode = args.refine_mode
     if args.engine:
         spec.refine.engine = args.engine
+    if args.refine_batch is not None:
+        if args.refine_batch < 0:
+            print(f"--refine-batch must be >= 0, got {args.refine_batch}")
+            return 2
+        spec.refine.batch = args.refine_batch
     cache_dir = None
     if not args.no_cache:
         cache_dir = args.cache_dir or spec.cache_dir or DEFAULT_CACHE_DIR
@@ -208,6 +213,10 @@ def main(argv=None) -> int:
                     help="override the spec's refine engine (fast = "
                          "core.fastsim interval replay + steady-state "
                          "layer extrapolation)")
+    rp.add_argument("--refine-batch", type=int, default=None,
+                    help="override the spec's refine.batch: max points "
+                         "per batched cross-point refinement job "
+                         "(0/1 = per-point, the default)")
     rp.set_defaults(fn=cmd_run)
 
     lp = sub.add_parser("list", help="list builtin campaign specs")

@@ -27,21 +27,37 @@ serving-fleet cell (``serve.fleet.simulate_serve_point`` — trace-driven
 continuous batching over analytic step costs). The kind field routes it
 here and keys the cache, so serve cells flow through every backend, the
 journal, and the result cache exactly like classic refinements.
+
+Since ISSUE 8 a payload may carry ``kind: "batch"``: many classic
+fast-engine points refined as one job (``refine_batch``), grouped by
+structural class so points differing only along latency-rescaling
+hardware axes share compiles, event-engine twin replays, and — when the
+dead-axis analysis proves the records identical — the records
+themselves (``core.batchsim``). The batch record is expanded back into
+per-point cache entries and journal events by ``exec.backend``, so
+downstream consumers never see the batching.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+import json
+from typing import Any, Dict, List, Optional, Tuple
 
-from ..core import fastsim
+import numpy as np
+
+from ..core import batchsim, fastsim
 from ..graph.compiler import CompileOptions, CompiledWorkload, compile_ops
 from ..graph.workloads import lm_workload_name, parse_lm_name, \
     resolve_workload
 from ..hw.chip import System
 from ..hw.presets import HwConfig, from_dict
+from ..obs.metrics import REGISTRY
 from ..power.powerem import PowerEM
+from .cache import content_key
+from .spec import ANALYTIC_AXES
 
 __all__ = ["refine_point", "refine_payload", "resolve_engine",
-           "crosscheck_point", "ENGINES"]
+           "crosscheck_point", "ENGINES", "batch_payload", "plan_batches",
+           "refine_batch"]
 
 ENGINES = ("event", "fast", "auto")
 
@@ -147,6 +163,8 @@ def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
     if payload.get("kind") == "serve":
         from ..serve.fleet import simulate_serve_point
         return simulate_serve_point(payload)
+    if payload.get("kind") == "batch":
+        return refine_batch(payload)
     engine = resolve_engine(payload.get("engine", "event"),
                             payload["workload"])
     cfg = from_dict(payload["hw"])
@@ -165,6 +183,216 @@ def refine_point(payload: Dict[str, Any]) -> Dict[str, Any]:
     prep = pem.analyze(sysm.tracer, pti_ns=payload["pti_ns"])
     return _record(cfg, nt, cw, makespan_ns=rep.makespan_ns,
                    n_tasks=rep.n_tasks, prep=prep, pem=pem, payload=payload)
+
+
+# ---------------------------------------------------------------------------
+# batched cross-point refinement (``core.batchsim``)
+
+
+def batch_payload(items: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Wrap classic refinement payloads into one batch-job payload.
+
+    The wrapper travels through every backend like any other payload
+    (``kind: "batch"`` routes it in ``refine_point``); the result is a
+    batch record — per-item records plus their content keys — which
+    ``exec.backend`` expands into per-point cache entries and journal
+    events, so batching is invisible downstream.
+    """
+    if not items:
+        raise ValueError("batch_payload needs at least one item")
+    for it in items:
+        if it.get("kind") is not None:
+            raise ValueError("only classic refinement payloads batch "
+                             f"(got kind={it.get('kind')!r})")
+    return {"kind": "batch", "items": [dict(it) for it in items]}
+
+
+def _class_key(payload: Dict[str, Any]) -> str:
+    """Structural-class planning key: everything in the payload except
+    the analytic hw axes. Two payloads with equal keys compile to the
+    same task graph (the compiler never reads the analytic fields), so
+    they are grouped without compiling — ``stack_tables``' structural
+    check and the duration/relaxation fan-out defense backstop the
+    claim at refinement time."""
+    hw = {k: v for k, v in payload["hw"].items() if k not in ANALYTIC_AXES}
+    rest = {k: v for k, v in payload.items() if k != "hw"}
+    return json.dumps({"hw": hw, "rest": rest}, sort_keys=True,
+                      default=float)
+
+
+def plan_batches(payloads: List[Dict[str, Any]], batch: int
+                 ) -> List[Tuple[Dict[str, Any], List[int]]]:
+    """Group a refinement work list into dispatchable jobs.
+
+    Returns ``[(job_payload, positions), ...]`` where ``positions``
+    index into ``payloads`` (record order is reconstructed from them).
+    Fast-engine classic points are grouped by structural class and
+    greedily packed — whole classes when they fit — into batch jobs of
+    at most ``batch`` points; serve/event/auto-event points and lone
+    leftovers stay single-point jobs. Deterministic: classes are
+    ordered by their first member's position and in-class points keep
+    work-list (grid) order, so every backend sees the same jobs in the
+    same order regardless of how the caller discovered the misses.
+    """
+    if batch < 2:
+        raise ValueError(f"plan_batches needs batch >= 2, got {batch}")
+    classes: Dict[str, List[int]] = {}
+    singles: List[int] = []
+    for i, p in enumerate(payloads):
+        if p.get("kind") is None and resolve_engine(
+                p.get("engine", "event"), p["workload"]) == "fast":
+            classes.setdefault(_class_key(p), []).append(i)
+        else:
+            singles.append(i)
+    jobs: List[Tuple[Dict[str, Any], List[int]]] = []
+    cur: List[int] = []
+
+    def flush() -> None:
+        if len(cur) == 1:
+            jobs.append((payloads[cur[0]], [cur[0]]))
+        elif cur:
+            jobs.append((batch_payload([payloads[i] for i in cur]),
+                         list(cur)))
+        cur.clear()
+
+    for key in sorted(classes, key=lambda k: classes[k][0]):
+        members = classes[key]
+        for c0 in range(0, len(members), batch):
+            chunk = members[c0:c0 + batch]
+            if len(cur) + len(chunk) > batch:
+                flush()
+            cur.extend(chunk)
+    flush()
+    for i in singles:
+        jobs.append((payloads[i], [i]))
+    jobs.sort(key=lambda j: min(j[1]))
+    return jobs
+
+
+def _refine_class(cls_items: List[Dict[str, Any]], members: List[int],
+                  records: List[Optional[Dict[str, Any]]],
+                  memo: Dict[Tuple, Tuple]) -> None:
+    """Refine one structural class (>= 2 fast-engine points) sharing
+    one compile, one stacked relaxation, and — per live-axis subgroup —
+    one twin replay, one splice, one Power-EM pass, one record."""
+    it0 = cls_items[0]
+    cfg0, nt, cw = _compile(it0)
+    opts = CompileOptions(n_tiles=nt, **it0["compile_opts"])
+    opts_json = json.dumps(it0["compile_opts"], sort_keys=True,
+                           default=float)
+    twin_names = _reduced_workloads(it0["workload"])
+    twins = [compile_ops(resolve_workload(n)(), cfg0, opts)
+             for n in twin_names]
+    twin_ix = {id(t): i for i, t in enumerate(twins)}
+    twin_dead = [batchsim.dead_axes(t) for t in twins]
+    dead = batchsim.dead_axes(cw)
+    cfgs = [from_dict(it["hw"]) for it in cls_items]
+    # batched lowering + one stacked list-scheduling relaxation for the
+    # whole class — the batch-scale analogue of the analytic pre-screen,
+    # and half of the record-sharing defense below
+    dur = batchsim.batch_durations(cw, cfgs)
+    bt = batchsim.BatchTaskTable(table=fastsim.lower(cw, cfgs[0]),
+                                 duration=dur, n_points=len(cls_items))
+    b_start, b_end, _ = batchsim.list_schedule_batched(bt)
+    groups: Dict[str, List[int]] = {}
+    for j, it in enumerate(cls_items):
+        groups.setdefault(batchsim.live_key(it["hw"], dead), []).append(j)
+    if REGISTRY.enabled:
+        REGISTRY.counter("batch.classes").inc()
+        REGISTRY.histogram("batch.class_size",
+                           bounds=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+                           ).observe(len(cls_items))
+        REGISTRY.histogram("batch.groups_per_class",
+                           bounds=(1.0, 2.0, 4.0, 8.0, 16.0)
+                           ).observe(len(groups))
+    for gkey in sorted(groups, key=lambda k: groups[k][0]):
+        g = groups[gkey]
+        head = g[0]
+        # record-sharing defense: a member may ride the head's record
+        # only when it is provably simulation-identical — bitwise-equal
+        # analytic durations AND stacked-relaxation intervals. A
+        # mismatch means the dead-axis proof missed something for this
+        # graph; those members refine individually instead.
+        shared = [j for j in g
+                  if np.array_equal(dur[j], dur[head])
+                  and np.array_equal(b_start[j], b_start[head])
+                  and np.array_equal(b_end[j], b_end[head])]
+        solo = [j for j in g if j not in set(shared)]
+        cfg_h = cfgs[head]
+        hw_h = cls_items[head]["hw"]
+
+        def verify(rcw: CompiledWorkload, _cfg: HwConfig = cfg_h,
+                   _hw: Dict[str, Any] = hw_h):
+            # one event-engine twin replay per (twin, live-config) —
+            # shared across subgroups AND classes of this batch job
+            # (the `layers` axis reuses the same shallow twins)
+            ti = twin_ix[id(rcw)]
+            k = (twin_names[ti], nt, opts_json,
+                 batchsim.live_key(_hw, twin_dead[ti]))
+            hit = memo.get(k)
+            if hit is not None:
+                if REGISTRY.enabled:
+                    REGISTRY.counter("batch.replay_memo",
+                                     result="hit").inc()
+                return hit
+            res = fastsim.verify_replay(rcw, _cfg, n_tiles=nt)
+            memo[k] = res
+            if REGISTRY.enabled:
+                REGISTRY.counter("batch.replay_memo", result="miss").inc()
+            return res
+
+        run = fastsim.simulate_fast(cw, cfg_h, n_tiles=nt, reduced=twins,
+                                    verify=verify)
+        pem = PowerEM(cfg_h, n_tiles=nt, freq_ghz=cfg_h.clock_ghz,
+                      temp_c=it0["temp_c"])
+        prep = pem.analyze(run.samples, pti_ns=it0["pti_ns"])
+        rec = _record(cfg_h, nt, cw, makespan_ns=run.makespan_ns,
+                      n_tasks=len(cw.tasks), prep=prep, pem=pem,
+                      payload=cls_items[head])
+        for j in shared:
+            records[members[j]] = rec
+        for j in solo:
+            records[members[j]] = refine_point(cls_items[j])
+        if REGISTRY.enabled:
+            REGISTRY.counter("batch.points", path="shared").inc(len(shared))
+            if solo:
+                REGISTRY.counter("batch.points",
+                                 path="fallback").inc(len(solo))
+
+
+def refine_batch(payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Refine a ``kind: "batch"`` job: every item, grouped for sharing.
+
+    Items are grouped by structural class; classes of one point — and
+    anything not on the fast engine — fall back to ``refine_point``
+    per item, **bitwise** identical to unbatched refinement. Returns a
+    batch record ``{"kind": "batch", "records": [...], "keys": [...]}``
+    with records in item order and each item's own content key, so the
+    exec layer can expand it into per-point cache/journal entries.
+    """
+    items = payload["items"]
+    if not items:
+        raise ValueError("batch payload has no items")
+    records: List[Optional[Dict[str, Any]]] = [None] * len(items)
+    classes: Dict[str, List[int]] = {}
+    for i, it in enumerate(items):
+        classes.setdefault(_class_key(it), []).append(i)
+    memo: Dict[Tuple, Tuple] = {}     # twin replays, shared job-wide
+    for key in sorted(classes, key=lambda k: classes[k][0]):
+        members = classes[key]
+        it0 = items[members[0]]
+        eng = resolve_engine(it0.get("engine", "event"), it0["workload"])
+        if len(members) == 1 or eng != "fast" or \
+                it0.get("kind") is not None:
+            for m in members:
+                records[m] = refine_point(items[m])
+            if REGISTRY.enabled:
+                REGISTRY.counter("batch.points",
+                                 path="fallback").inc(len(members))
+            continue
+        _refine_class([items[m] for m in members], members, records, memo)
+    return {"kind": "batch", "records": records,
+            "keys": [content_key(it) for it in items]}
 
 
 def crosscheck_point(payload: Dict[str, Any]) -> Dict[str, Any]:

@@ -40,7 +40,7 @@ from ..serve.fleet import serve_payload
 from .cache import ResultCache, content_key
 from .pareto import select_points
 from .prescreen import prescreen_cell
-from .refine import refine_payload
+from .refine import plan_batches, refine_payload
 from .spec import SweepSpec
 
 __all__ = ["CampaignResult", "run_campaign", "save_result", "load_result",
@@ -271,14 +271,49 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         misses = list(range(len(todo)))
 
     if misses:
-        _log(progress, f"refine: {len(misses)} points via {bk.name} backend")
-        # the backend owns cache write-through (each record is persisted
-        # as soon as it is refined, not after the batch) — no second put
-        fresh = bk.refine([todo[i] for i in misses],
-                          keys=[keys[i] for i in misses],
-                          journal=journal, cache=cache, progress=progress)
-        for i, rec in zip(misses, fresh):
-            results[i] = _canon(rec)
+        batch_n = spec.refine.batch
+        if batch_n > 1:
+            # batched cross-point refinement: group fast-engine misses
+            # by structural class into batch jobs (deterministic — grid
+            # order in and out); batch records expand back to per-point
+            # results here and to per-point cache/journal entries in
+            # the backends
+            jobs = plan_batches([todo[i] for i in misses], batch_n)
+            job_payloads = [jp for jp, _ in jobs]
+            job_keys = [content_key(jp) if jp.get("kind") == "batch"
+                        else keys[misses[pos[0]]] for jp, pos in jobs]
+            n_batched = sum(len(pos) for jp, pos in jobs
+                            if jp.get("kind") == "batch")
+            _log(progress,
+                 f"refine: {len(misses)} points via {bk.name} backend "
+                 f"({n_batched} batched into "
+                 f"{sum(1 for jp, _ in jobs if jp.get('kind') == 'batch')}"
+                 f" jobs of <= {batch_n}, "
+                 f"{len(misses) - n_batched} single)")
+            if REGISTRY.enabled:
+                REGISTRY.counter("runner.batch_jobs",
+                                 backend=bk.name).inc(len(jobs))
+            fresh = bk.refine(job_payloads, keys=job_keys,
+                              journal=journal, cache=cache,
+                              progress=progress)
+            for (jp, pos), rec in zip(jobs, fresh):
+                if rec.get("kind") == "batch":
+                    for p_i, sub in zip(pos, rec["records"]):
+                        results[misses[p_i]] = _canon(sub)
+                else:
+                    results[misses[pos[0]]] = _canon(rec)
+        else:
+            _log(progress,
+                 f"refine: {len(misses)} points via {bk.name} backend")
+            # the backend owns cache write-through (each record is
+            # persisted as soon as it is refined, not after the batch)
+            # — no second put
+            fresh = bk.refine([todo[i] for i in misses],
+                              keys=[keys[i] for i in misses],
+                              journal=journal, cache=cache,
+                              progress=progress)
+            for i, rec in zip(misses, fresh):
+                results[i] = _canon(rec)
     refine_s = time.time() - t0
     if REGISTRY.enabled:
         REGISTRY.counter("runner.cache_hits", backend=bk.name

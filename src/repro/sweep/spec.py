@@ -98,6 +98,16 @@ class RefineSpec:
     otherwise). The default honors ``REPRO_REFINE_ENGINE`` so CI can
     run whole campaign lanes on either engine; the value is part of
     every refinement payload and therefore of the result-cache key.
+
+    ``batch`` > 1 turns on batched cross-point refinement
+    (``sweep.refine.plan_batches`` / ``core.batchsim``): fast-engine
+    points are grouped by structural class and dispatched as batch jobs
+    of at most ``batch`` points, sharing compiles / twin replays /
+    records within a job. 0 or 1 (default; ``REPRO_REFINE_BATCH``
+    overrides) keeps the one-payload-per-point path. Records are
+    identical either way — batching only changes how much work is
+    shared — and individual points keep their own cache keys, so
+    flipping ``batch`` never invalidates the cache.
     """
 
     mode: str = "pareto"          # pareto | all | none
@@ -107,6 +117,8 @@ class RefineSpec:
     keep_series: bool = False     # keep per-module PTI power series
     engine: str = field(default_factory=lambda: os.environ.get(
         "REPRO_REFINE_ENGINE", "event"))   # event | fast | auto
+    batch: int = field(default_factory=lambda: int(os.environ.get(
+        "REPRO_REFINE_BATCH", "0")))   # max points per batch job
 
     def __post_init__(self):
         if self.mode not in ("pareto", "all", "none"):
@@ -115,6 +127,9 @@ class RefineSpec:
         if self.engine not in ("event", "fast", "auto"):
             raise ValueError(f"refine.engine must be event|fast|auto, "
                              f"got {self.engine!r}")
+        if self.batch < 0:
+            raise ValueError(f"refine.batch must be >= 0, "
+                             f"got {self.batch}")
 
 
 @dataclass

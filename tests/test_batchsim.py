@@ -1,0 +1,340 @@
+"""Batched cross-point refinement (``core.batchsim``) — differential
+lockdown (ISSUE 8).
+
+Five families:
+
+1. **Differential harness** — batched refinement records are *bitwise*
+   the per-point fast-engine records (all three phases, live and dead
+   axes mixed), per-point fast records agree with the event engine
+   within 1e-9 relative (transitively pinning batched == event), and a
+   structural class that degenerates to one point takes the bitwise
+   ``refine_point`` fallback.
+2. **Batched core vs scalar core** — on randomized op lists,
+   ``batch_durations`` rows and ``list_schedule_batched`` rows are
+   bitwise the per-config ``lower``/``list_schedule`` outputs, and
+   ``stack_tables`` rejects structurally different tables.
+3. **Structural hash** — invariant along every analytic axis, stable
+   across processes (no ``id()``/dict-order dependence), and across all
+   builtin campaign workloads (``lm_full_pod``/``lm_decode_kv``/
+   ``moe_ep_grid``) equal hashes only ever pair graphs that really are
+   structurally identical (``stack_tables`` accepts them).
+4. **Dead-axis analysis** — DCN axes dead exactly when no collective
+   leaves the pod, ICI latency dead exactly when there are no
+   collectives, link rate never dead (Power-EM reads it).
+5. **Planning + plumbing** — ``plan_batches`` determinism/coverage/
+   ordering, ``RefineSpec.batch`` validation + env default, and a mini
+   campaign run batched vs unbatched: byte-identical records,
+   per-point journal events, per-point cache entries that serve an
+   unbatched rerun.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import batchsim, fastsim
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.workloads import Op, resolve_workload
+from repro.hw.presets import paper_skew, resolve_preset, to_dict
+from repro.sweep.refine import (batch_payload, plan_batches, refine_batch,
+                                refine_payload, refine_point)
+from repro.sweep.spec import ANALYTIC_AXES, RefineSpec, load_builtin_spec
+
+CFG = paper_skew()
+V5E = resolve_preset("v5e")
+
+# same three phases test_fastsim extrapolates (L8 >= FAST_MIN_LAYERS)
+BATCH_POINTS = [
+    "lm/qwen3-32b/L8/s64b2tp2pod2",
+    "lm/qwen3-32b/L8/decode/kv128b2tp2pod2",
+    "lm/qwen3-32b/L8/train/s64b2tp2dp2pod2",
+]
+
+
+def _payload(workload, **hw_over):
+    hw = to_dict(V5E)
+    hw.update(hw_over)
+    return refine_payload(workload=workload, n_tiles=2, hw=hw,
+                          compile_opts={}, pti_ns=50_000.0, temp_c=60.0,
+                          keep_series=False, engine="fast")
+
+
+# -- 1. differential harness ------------------------------------------------
+
+@pytest.mark.parametrize("workload", BATCH_POINTS)
+def test_batched_records_bitwise_equal_per_point(workload):
+    """Per phase: a class mixing a dead axis (DCN at tp2/pod2) with a
+    live one (clock) refines batched == per-point, bitwise."""
+    items = [_payload(workload, dcn_gbps=d, clock_ghz=c)
+             for c in (0.94, 1.2) for d in (50.0, 100.0)]
+    solo = [refine_point(it) for it in items]
+    out = refine_batch(batch_payload(items))
+    assert out["kind"] == "batch"
+    assert len(out["records"]) == len(out["keys"]) == len(items)
+    for a, b in zip(solo, out["records"]):
+        assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+@pytest.mark.parametrize("workload", BATCH_POINTS)
+def test_batched_records_match_event_engine(workload):
+    """Transitive 1e-9 contract vs ground truth: batched == per-point
+    fast (bitwise, above), and here fast vs the raw event engine."""
+    from repro.sweep.refine import crosscheck_point
+
+    out = crosscheck_point(_payload(workload))
+    assert out["extrapolated"], out["detail"]
+    assert max(out["record_rel_diff"].values()) < 1e-9
+
+
+def test_singleton_class_takes_bitwise_refine_point_fallback():
+    """Two size-1 classes in one job: both records bitwise equal the
+    per-point path (which they in fact took)."""
+    items = [_payload(BATCH_POINTS[0]), _payload(BATCH_POINTS[1])]
+    out = refine_batch(batch_payload(items))
+    for it, rec in zip(items, out["records"]):
+        assert rec == refine_point(it)
+
+
+def test_batch_payload_validation():
+    with pytest.raises(ValueError):
+        batch_payload([])
+    with pytest.raises(ValueError):
+        batch_payload([{"kind": "serve", "workload": "x"}])
+
+
+# -- 2. batched core vs scalar core -----------------------------------------
+
+def _op(i, kind, size, group, cross_pod, stream):
+    if kind == "matmul":
+        return Op(f"op{i}", "matmul", m=size, n=64, k=64,
+                  in_bytes=size * 64, out_bytes=size * 64,
+                  w_bytes=64 * 64, stream=stream)
+    if kind == "eltwise":
+        return Op(f"op{i}", "eltwise", elems=size * 64, vec_kind="add",
+                  in_bytes=size * 64, out_bytes=size * 64, stream=stream)
+    return Op(f"op{i}", kind, in_bytes=size * 256, out_bytes=size * 256,
+              group=group, cross_pod=cross_pod)
+
+
+op_lists = st.lists(
+    st.tuples(st.sampled_from(["matmul", "eltwise", "allreduce",
+                               "alltoall"]),
+              st.sampled_from([8, 96, 700]),
+              st.sampled_from([2, 4]),
+              st.booleans(),
+              st.booleans()),
+    min_size=1, max_size=8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(op_lists, st.sampled_from([1, 2]))
+def test_batched_schedule_bitwise_equals_scalar(descr, nt):
+    """lower/list_schedule per config == batch_durations/
+    list_schedule_batched rows, bit for bit, on random op lists."""
+    ops = [_op(i, *d) for i, d in enumerate(descr)]
+    cw = compile_ops(ops, CFG, CompileOptions(n_tiles=nt))
+    cfgs = [CFG,
+            CFG.replace(clock_ghz=CFG.clock_ghz * 1.5),
+            CFG.replace(hbm_gbps=CFG.hbm_gbps * 0.5,
+                        ici_link_gbps=CFG.ici_link_gbps * 2.0)]
+    tables = [fastsim.lower(cw, c) for c in cfgs]
+    dur = batchsim.batch_durations(cw, cfgs)
+    bt = batchsim.stack_tables(tables)
+    bs, be, bm = batchsim.list_schedule_batched(bt)
+    for p, tb in enumerate(tables):
+        assert np.array_equal(dur[p], tb.duration)
+        s, e, mk = fastsim.list_schedule(tb)
+        assert np.array_equal(bs[p], s)
+        assert np.array_equal(be[p], e)
+        assert bm[p] == mk
+
+
+def test_stack_tables_rejects_structural_mismatch():
+    a = compile_ops([_op(0, "matmul", 96, 2, False, False)], CFG,
+                    CompileOptions(n_tiles=2))
+    b = compile_ops([_op(0, "eltwise", 96, 2, False, False)], CFG,
+                    CompileOptions(n_tiles=2))
+    with pytest.raises(ValueError):
+        batchsim.stack_tables([fastsim.lower(a, CFG),
+                               fastsim.lower(b, CFG)])
+    with pytest.raises(ValueError):
+        batchsim.stack_tables([])
+
+
+# -- 3. structural hash ------------------------------------------------------
+
+def test_structural_hash_invariant_along_every_analytic_axis():
+    cw = compile_ops(resolve_workload(BATCH_POINTS[0])(), V5E,
+                     CompileOptions(n_tiles=2))
+    base = batchsim.structural_hash(cw, n_tiles=2)
+    hw = to_dict(V5E)
+    for axis in sorted(ANALYTIC_AXES):
+        assert axis in hw, axis
+        over = dict(hw)
+        over[axis] = (hw[axis] * 2 if isinstance(hw[axis], float)
+                      else hw[axis] * 2)
+        from repro.hw.presets import from_dict
+        cw2 = compile_ops(resolve_workload(BATCH_POINTS[0])(),
+                          from_dict(over), CompileOptions(n_tiles=2))
+        assert batchsim.structural_hash(cw2, n_tiles=2) == base, axis
+    # but not invariant to the graph itself or the tiling
+    assert batchsim.structural_hash(cw, n_tiles=4) != base
+    cw3 = compile_ops(resolve_workload(BATCH_POINTS[1])(), V5E,
+                      CompileOptions(n_tiles=2))
+    assert batchsim.structural_hash(cw3, n_tiles=2) != base
+
+
+def test_structural_hash_never_collides_across_builtin_campaigns():
+    """Across every workload of the three builtin campaigns, equal
+    hashes only pair graphs that are *actually* structurally identical
+    (their lowered tables stack) — renamed isomorphisms allowed, true
+    collisions not."""
+    names = []
+    for spec_name in ("lm_full_pod", "lm_decode_kv", "moe_ep_grid"):
+        names.extend(load_builtin_spec(spec_name).workloads)
+    by_hash = {}
+    for w in sorted(set(names)):
+        cw = compile_ops(resolve_workload(w)(), V5E,
+                         CompileOptions(n_tiles=2))
+        h = batchsim.structural_hash(cw, n_tiles=2)
+        by_hash.setdefault(h, []).append(cw)
+    assert len(by_hash) > 1
+    for h, cws in by_hash.items():
+        if len(cws) == 1:
+            continue
+        # same hash -> stacking must succeed (structure identical)
+        batchsim.stack_tables([fastsim.lower(c, V5E) for c in cws])
+
+
+def test_structural_hash_stable_across_processes():
+    cw = compile_ops(resolve_workload(BATCH_POINTS[0])(), V5E,
+                     CompileOptions(n_tiles=2))
+    here = batchsim.structural_hash(cw, n_tiles=2)
+    code = (
+        "from repro.core import batchsim\n"
+        "from repro.graph.compiler import CompileOptions, compile_ops\n"
+        "from repro.graph.workloads import resolve_workload\n"
+        "from repro.hw.presets import resolve_preset\n"
+        f"cw = compile_ops(resolve_workload({BATCH_POINTS[0]!r})(),\n"
+        "                 resolve_preset('v5e'), CompileOptions(n_tiles=2))\n"
+        "print(batchsim.structural_hash(cw, n_tiles=2))\n")
+    out = subprocess.run([sys.executable, "-c", code], check=True,
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "PYTHONHASHSEED": "77"},
+                         cwd=__file__.rsplit("/tests/", 1)[0])
+    assert out.stdout.strip() == here
+
+
+# -- 4. dead-axis analysis ---------------------------------------------------
+
+def test_dead_axes_follow_collective_placement():
+    def axes_of(workload):
+        cw = compile_ops(resolve_workload(workload)(), V5E,
+                         CompileOptions(n_tiles=2))
+        return batchsim.dead_axes(cw)
+
+    # tp4 ring on a 2-chip pod leaves the pod: DCN is live
+    assert axes_of("lm/qwen3-32b/L8/s64b2tp4pod2") == frozenset()
+    # tp2 ring inside a 2-chip pod: DCN dead, ICI latency live
+    assert axes_of("lm/qwen3-32b/L8/s64b2tp2pod2") == frozenset(
+        {"dcn_gbps", "dcn_latency_ns"})
+    # tp1: no collectives at all -> ICI latency dead too
+    assert axes_of("lm/qwen3-32b/L8/s64b2tp1") == frozenset(
+        {"dcn_gbps", "dcn_latency_ns", "ici_latency_ns"})
+    # link rate is never dead (Power-EM sizes the ici tree by it)
+    for w in ("lm/qwen3-32b/L8/s64b2tp1", "lm/qwen3-32b/L8/s64b2tp2pod2"):
+        assert "ici_link_gbps" not in axes_of(w)
+        assert axes_of(w) <= ANALYTIC_AXES
+
+
+def test_live_key_partitions_on_live_axes_only():
+    hw = to_dict(V5E)
+    dead = frozenset({"dcn_gbps", "dcn_latency_ns"})
+    a = batchsim.live_key(hw, dead)
+    hw2 = dict(hw, dcn_gbps=hw["dcn_gbps"] * 4)
+    assert batchsim.live_key(hw2, dead) == a
+    hw3 = dict(hw, clock_ghz=hw["clock_ghz"] * 2)
+    assert batchsim.live_key(hw3, dead) != a
+
+
+# -- 5. planning + plumbing --------------------------------------------------
+
+def test_plan_batches_deterministic_coverage_and_ordering():
+    items = []
+    # two structural classes interleaved in grid order + one event point
+    for d in (25.0, 50.0, 100.0):
+        items.append(_payload(BATCH_POINTS[0], dcn_gbps=d))
+        items.append(_payload(BATCH_POINTS[1], dcn_gbps=d))
+    ev = dict(_payload("lm/qwen3-32b/L8/s64b2tp2pod2"), engine="event")
+    items.append(ev)
+    jobs = plan_batches(items, 4)
+    # every position exactly once
+    cover = sorted(i for _, pos in jobs for i in pos)
+    assert cover == list(range(len(items)))
+    # classes keep grid order internally and jobs are ordered by their
+    # first position; the event point stays a single-point job
+    assert all(pos == sorted(pos) for _, pos in jobs)
+    assert [min(pos) for _, pos in jobs] == sorted(
+        min(pos) for _, pos in jobs)
+    singles = [pos for jp, pos in jobs if jp.get("kind") != "batch"]
+    assert [6] in singles
+    # batch jobs respect the cap and batch whole classes when they fit
+    for jp, pos in jobs:
+        if jp.get("kind") == "batch":
+            assert 2 <= len(pos) <= 4
+            assert [it["workload"] for it in jp["items"]] == \
+                [items[i]["workload"] for i in pos]
+    # deterministic: same input, same plan
+    again = plan_batches(list(items), 4)
+    assert [(jp.get("kind"), pos) for jp, pos in jobs] == \
+        [(jp.get("kind"), pos) for jp, pos in again]
+    with pytest.raises(ValueError):
+        plan_batches(items, 1)
+
+
+def test_refine_spec_batch_validation_and_env_default(monkeypatch):
+    monkeypatch.delenv("REPRO_REFINE_BATCH", raising=False)
+    assert RefineSpec().batch == 0
+    monkeypatch.setenv("REPRO_REFINE_BATCH", "16")
+    assert RefineSpec().batch == 16
+    monkeypatch.delenv("REPRO_REFINE_BATCH")
+    with pytest.raises(ValueError):
+        RefineSpec(batch=-1)
+
+
+def test_campaign_batched_equals_unbatched_with_journal_and_cache(tmp_path):
+    from repro.sweep import SweepSpec
+    from repro.sweep.runner import run_campaign
+
+    def spec(batch):
+        return SweepSpec(
+            name="batch_mini",
+            lm_grid={"arch": "qwen3-32b", "seq": [64], "batch": [2],
+                     "tp": [2], "layers": [8, 16], "pod": [2]},
+            preset="v5e", axes={"dcn_gbps": [50.0, 100.0]}, n_tiles=[2],
+            refine=RefineSpec(mode="all", pti_ns=50_000.0, engine="fast",
+                              batch=batch))
+
+    unbatched = run_campaign(spec(0), backend="inline", use_cache=False)
+    jpath = tmp_path / "journal.jsonl"
+    cdir = str(tmp_path / "cache")
+    batched = run_campaign(spec(8), backend="inline", cache_dir=cdir,
+                           journal_path=str(jpath))
+    strip = [{k: v for k, v in r.items() if k != "cached"}
+             for r in batched.records]
+    assert json.dumps(strip, sort_keys=True) == \
+        json.dumps([{k: v for k, v in r.items() if k != "cached"}
+                    for r in unbatched.records], sort_keys=True)
+    # the journal saw one done event per POINT, not per batch job
+    done = [json.loads(ln) for ln in jpath.read_text().splitlines()
+            if '"done"' in ln]
+    assert len(done) == 4
+    assert len({d["key"] for d in done}) == 4
+    # per-point cache entries serve an UNBATCHED rerun entirely
+    rerun = run_campaign(spec(0), backend="inline", cache_dir=cdir)
+    assert rerun.summary["cache_hits"] == 4
+    assert rerun.summary["simulated"] == 0

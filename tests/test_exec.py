@@ -361,7 +361,9 @@ def test_campaign_spool_backend_matches_inline(tmp_path):
 def test_campaign_spool_resume_skips_done_jobs(tmp_path):
     """Kill-and-resume at the spool level: results that survived a dead
     runner are collected without re-simulation."""
-    spec = _small_spec()
+    # pin batch=0: this test counts spool jobs (one per point), so it
+    # must not merge points into batch jobs under REPRO_REFINE_BATCH
+    spec = _small_spec(refine=RefineSpec(mode="all", batch=0))
     root = str(tmp_path / "spool")
     jpath = str(tmp_path / "j.jsonl")
 

@@ -78,6 +78,20 @@ def _specs():
                         "slo": {"ttft_ms": 500.0, "tpot_ms": 50.0}},
             preset="v5e", n_tiles=[2],
             refine=RefineSpec(mode="all")),
+        # refine.batch=8: the whole slice dispatches as ONE batch job
+        # (ISSUE 8) — two structural classes along the layers axis
+        # sharing twin replays, a dead DCN axis inside each class
+        # sharing records — so this fixture locks the structural
+        # hash/dead-axis machinery across backends and against frozen
+        # per-point records (which must be bitwise what per-point
+        # refinement produces)
+        "lm_batch_slice": SweepSpec(
+            name="lm_batch_slice",
+            lm_grid={"arch": "qwen3-32b", "seq": [64], "batch": [2],
+                     "tp": [2], "layers": [8, 16], "pod": [2]},
+            preset="v5e", axes={"dcn_gbps": [50.0, 100.0]}, n_tiles=[2],
+            refine=RefineSpec(mode="all", pti_ns=50_000.0, engine="fast",
+                              batch=8)),
         # refine.engine="fast": 16-layer points actually take the
         # steady-state extrapolation path (ISSUE 5), so this slice locks
         # both the fast engine's determinism across backends and its
