@@ -1,0 +1,101 @@
+"""Captured-HLO ingestion throughput + one crosscheck cell.
+
+Times the three stages a campaign pays when an ``hlo/<fixture>``
+workload is first touched — gzip load + parse (``extract_tasks``),
+lowering into the ``Op`` contract (``lower_tasks``), and the compile to
+a barrier-synchronized task graph — then refines one ingested point and
+its hand-built twin on the fast engine and reports the deviation ratio.
+Emits ``BENCH_ingest.json``.
+
+No threshold gate — 2-CPU CI runners are noisy; CI archives the JSON as
+an artifact so the trajectory is inspectable per commit.
+
+Run:  PYTHONPATH=src python benchmarks/bench_ingest.py [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.graph import ingest
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.hlo_parser import extract_tasks
+from repro.hw.presets import resolve_preset, to_dict
+from repro.sweep.refine import refine_payload, refine_point
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO, "BENCH_ingest.json")
+
+CROSSCHECK_FIXTURE = "qwen2_1_5b_prefill"
+
+
+def bench_fixture(fixture: str, cfg) -> dict:
+    t0 = time.time()
+    text = ingest.load_fixture(fixture)
+    meta = ingest.fixture_meta(fixture)
+    tasks = extract_tasks(text, pod_size=int(meta.get("pod_size", 0)))
+    parse_s = time.time() - t0
+
+    t0 = time.time()
+    ops, rep = ingest.lower_tasks(tasks)
+    lower_s = time.time() - t0
+
+    t0 = time.time()
+    cw = compile_ops(ops, cfg, CompileOptions(n_tiles=2))
+    compile_s = time.time() - t0
+    return {
+        "hlo_kb": len(text) / 1024.0,
+        "tasks": rep.n_tasks, "ops": rep.n_ops,
+        "compiled_tasks": len(cw.tasks), "layers": rep.n_layers,
+        "parse_s": parse_s, "lower_s": lower_s, "compile_s": compile_s,
+        "tasks_per_s": rep.n_tasks / max(parse_s + lower_s, 1e-9),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    cfg = resolve_preset("v5e")
+    hw = to_dict(cfg)
+    out = {"fixtures": {}, "crosscheck": {}}
+    for fx in ingest.fixture_names():
+        out["fixtures"][fx] = bench_fixture(fx, cfg)
+        r = out["fixtures"][fx]
+        print(f"{fx}: {r['hlo_kb']:.0f} KB -> {r['tasks']} tasks "
+              f"in {r['parse_s'] + r['lower_s']:.3f}s "
+              f"({r['tasks_per_s']:.0f} tasks/s), compile "
+              f"{r['compile_s']:.3f}s")
+
+    # one crosscheck cell: ingested vs hand-built, fast engine
+    cell = {}
+    for tag, wl in [("ingested", f"hlo/{CROSSCHECK_FIXTURE}"),
+                    ("hand_built", ingest.twin_name(CROSSCHECK_FIXTURE))]:
+        t0 = time.time()
+        rec = refine_point(refine_payload(
+            workload=wl, n_tiles=2, hw=hw, compile_opts={},
+            pti_ns=50_000.0, temp_c=60.0, keep_series=False,
+            engine="fast"))
+        cell[tag] = {"workload": wl, "wall_s": time.time() - t0,
+                     "time_ns": rec["time_ns"],
+                     "energy_j": rec["energy_j"]}
+    cell["deviation_ratio"] = (cell["ingested"]["time_ns"] /
+                               cell["hand_built"]["time_ns"])
+    band = ingest.fixture_meta(CROSSCHECK_FIXTURE)["band"]
+    cell["band"] = band
+    out["crosscheck"] = cell
+    print(f"crosscheck {CROSSCHECK_FIXTURE}: refined deviation "
+          f"{cell['deviation_ratio']:.2f}x (documented analytic band "
+          f"{band})")
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

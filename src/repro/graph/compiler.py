@@ -32,7 +32,10 @@ from .workloads import Op
 __all__ = ["CompileOptions", "compile_ops", "CompiledWorkload"]
 
 # op kind -> hw.ici.CollectiveSpec op name
-_COLLECTIVE_OPS = {"allreduce": "all-reduce", "alltoall": "all-to-all"}
+_COLLECTIVE_OPS = {"allreduce": "all-reduce", "alltoall": "all-to-all",
+                   "allgather": "all-gather",
+                   "reducescatter": "reduce-scatter",
+                   "permute": "collective-permute"}
 
 
 @dataclass

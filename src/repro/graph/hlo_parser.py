@@ -20,13 +20,15 @@ condition), validated against cost_analysis on unrolled modules in tests.
 from __future__ import annotations
 
 import re
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = ["parse_module", "summarize", "HloModule", "HloComputation",
-           "HloInstr", "Collective", "Summary", "extract_tasks"]
+           "HloInstr", "Collective", "Summary", "TaskSpec",
+           "extract_tasks"]
 
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -48,12 +50,25 @@ TRIVIAL_OPS = {
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
+# dtypes we have already warned about (warn ONCE per dtype token, not per
+# shape): a missing DTYPE_BYTES entry silently zeroes every byte estimate
+# that touches the shape, which ingestion would propagate into HBM/payload
+# totals — make the gap loud without flooding the log
+_WARNED_DTYPES: set = set()
+
 
 def _shapes_of(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
     out = []
     for m in _SHAPE_RE.finditer(type_str):
         dt = m.group(1)
         if dt not in DTYPE_BYTES:
+            if dt not in _WARNED_DTYPES:
+                _WARNED_DTYPES.add(dt)
+                warnings.warn(
+                    f"hlo_parser: unknown dtype {dt!r} in {type_str!r}; "
+                    f"its shapes are dropped from every byte/element "
+                    f"estimate — add it to DTYPE_BYTES",
+                    stacklevel=2)
             continue
         dims = tuple(int(x) for x in m.group(2).split(",") if x)
         out.append((dt, dims))
@@ -248,6 +263,23 @@ def decode_replica_groups(attrs: str) -> Optional[np.ndarray]:
     return None
 
 
+def _collective_io(op: str, out_b: float, opnd_b: float
+                   ) -> Tuple[float, float]:
+    """``(payload_bytes, out_bytes)`` of one collective instruction.
+
+    Async ``*-start`` ops type their output as a tuple carrying BOTH the
+    operand aliases and the result buffers (the ``-done`` peels the
+    result off), so the raw output-byte count double-counts the payload
+    — an ``all-reduce-start`` over N bytes parses as a 2N-byte output.
+    Subtract the operand bytes to recover the result size; a backend
+    that types ``-start`` as a bare array (no operand alias in the
+    tuple) yields ``out_eff == 0`` and the operand size wins the max,
+    which is the same payload the sync op would report.
+    """
+    out_eff = max(out_b - opnd_b, 0.0) if op.endswith("-start") else out_b
+    return max(out_eff, opnd_b), out_eff
+
+
 # ---------------------------------------------------------------------------
 # cost aggregation
 # ---------------------------------------------------------------------------
@@ -408,6 +440,35 @@ class _Analyzer:
             return max(consts)
         return 1
 
+    def _fusion_gemm(self, called: Optional[str], depth: int = 0
+                     ) -> Optional[Tuple[int, int, int, float]]:
+        """Dominant inner dot/convolution geometry of a fusion/call
+        computation: ``(m, n, k, flops)`` of the highest-FLOP
+        contraction found (recursing through nested fusions), or None
+        when the computation contains no contraction."""
+        comp = self.mod.computations.get(called) if called else None
+        if comp is None or depth > 4:
+            return None
+        best: Optional[Tuple[int, int, int, float]] = None
+        for ins in comp.instrs:
+            g = None
+            if ins.opcode == "dot":
+                g = _dot_mnk(comp, ins)
+            elif ins.opcode == "convolution":
+                g = _conv_mnk(comp, ins)
+            elif ins.opcode in ("fusion", "call"):
+                sub = self._called(ins.attrs, "calls") or \
+                    self._called(ins.attrs, "to_apply")
+                gf = self._fusion_gemm(sub, depth + 1)
+                if gf and (best is None or gf[3] > best[3]):
+                    best = gf
+                continue
+            if g is not None:
+                cand = (*g, 2.0 * g[0] * g[1] * g[2])
+                if best is None or cand[3] > best[3]:
+                    best = cand
+        return best
+
     def _dot_flops(self, comp: HloComputation, ins: HloInstr) -> float:
         out_elems = _elems_of(ins.out_shapes)
         lhs = comp.table.get(ins.operands[0]) if ins.operands else None
@@ -519,13 +580,13 @@ class _Analyzer:
                 if groups is not None and self.pod_size:
                     pods = groups // self.pod_size
                     crosses = bool(np.any(pods.max(axis=1) != pods.min(axis=1)))
-                payload = max(out_b, opnd_b)
+                payload, out_eff = _collective_io(op, out_b, opnd_b)
                 s.collectives.append(Collective(
                     op=op.replace("-start", ""), payload_bytes=payload,
                     group_size=gsize, n_groups=ngroups, count=1.0,
                     crosses_pod=crosses, name=ins.name))
                 if not in_fusion:
-                    s.hbm_bytes += io_b
+                    s.hbm_bytes += opnd_b + out_eff
                 continue
             if op == "dot":
                 s.dot_flops += self._dot_flops(comp, ins)
@@ -598,6 +659,45 @@ def summarize(text: str, *, pod_size: int = 0,
 # task extraction for the event simulator
 # ---------------------------------------------------------------------------
 
+def _dot_mnk(comp: HloComputation, ins: HloInstr
+             ) -> Optional[Tuple[int, int, int]]:
+    """GEMM view of a dot: k = product of lhs contracting dims, n = the
+    trailing output dim (rhs non-contracting), m = out_elems / n (batch
+    dims fold into m — a batched GEMM walks the array batch-by-batch)."""
+    if not ins.out_shapes:
+        return None
+    out_elems = _elems_of(ins.out_shapes)
+    lhs = comp.table.get(ins.operands[0]) if ins.operands else None
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    k = 1
+    if lhs and m and m.group(1):
+        dims = lhs[0][1]
+        for c in m.group(1).split(","):
+            ci = int(c)
+            if ci < len(dims):
+                k *= dims[ci]
+    dims = ins.out_shapes[0][1]
+    n = dims[-1] if dims else 1
+    return (max(out_elems // max(n, 1), 1), max(int(n), 1), max(int(k), 1))
+
+
+def _conv_mnk(comp: HloComputation, ins: HloInstr
+              ) -> Optional[Tuple[int, int, int]]:
+    """im2col GEMM view of a convolution, consistent with
+    ``_Analyzer._conv_flops``: n = output features (approx: the largest
+    kernel dim), k = kernel elems per output feature."""
+    out_elems = _elems_of(ins.out_shapes)
+    rhs = comp.table.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    if not rhs or not rhs[0][1]:
+        return (max(int(out_elems), 1), 1, 1)
+    ke = 1
+    for d in rhs[0][1]:
+        ke *= d
+    of = max(rhs[0][1])
+    return (max(out_elems // max(of, 1), 1), max(int(of), 1),
+            max(ke // max(of, 1), 1))
+
+
 @dataclass
 class TaskSpec:
     """One schedulable unit for TPU-EM (engine-mapped HLO instruction)."""
@@ -610,6 +710,11 @@ class TaskSpec:
     bytes_out: float = 0.0
     collective: Optional[Collective] = None
     deps: Tuple[int, ...] = ()
+    # GEMM view of the dominant contraction for "mxu" tasks (m, n, k);
+    # None when the engine is not mxu or no dot/conv was found. For
+    # fusions this is the geometry of the highest-FLOP inner dot — the
+    # task's total ``flops`` may exceed 2*m*n*k when several dots fused.
+    gemm: Optional[Tuple[int, int, int]] = None
 
 
 def extract_tasks(text: str, *, pod_size: int = 0,
@@ -666,30 +771,35 @@ def extract_tasks(text: str, *, pod_size: int = 0,
                 if groups is not None and pod_size:
                     pods = groups // pod_size
                     crosses = bool(np.any(pods.max(axis=1) != pods.min(axis=1)))
+                payload, out_eff = _collective_io(op, out_b, opnd_b)
                 coll = Collective(op=op.replace("-start", ""),
-                                  payload_bytes=max(out_b, opnd_b),
+                                  payload_bytes=payload,
                                   group_size=gsize,
                                   n_groups=int(groups.shape[0]) if groups is not None else 1,
                                   count=1.0, crosses_pod=crosses,
                                   name=ins.name)
                 t = TaskSpec(prefix + ins.name, "ici", bytes_in=opnd_b,
-                             bytes_out=out_b, collective=coll, deps=deps)
+                             bytes_out=out_eff, collective=coll, deps=deps)
             elif op == "dot":
                 t = TaskSpec(prefix + ins.name, "mxu",
                              flops=an._dot_flops(comp, ins),
-                             bytes_in=rd, bytes_out=wr, deps=deps)
+                             bytes_in=rd, bytes_out=wr, deps=deps,
+                             gemm=_dot_mnk(comp, ins))
             elif op == "convolution":
                 t = TaskSpec(prefix + ins.name, "mxu",
                              flops=an._conv_flops(comp, ins),
-                             bytes_in=rd, bytes_out=wr, deps=deps)
+                             bytes_in=rd, bytes_out=wr, deps=deps,
+                             gemm=_conv_mnk(comp, ins))
             elif op in ("fusion", "call"):
                 called = an._called(ins.attrs, "calls") or \
                     an._called(ins.attrs, "to_apply")
                 sub = an.analyze(called, True) if called else Summary()
                 engine = "mxu" if sub.flops > 0 else "vector"
+                g = an._fusion_gemm(called) if engine == "mxu" else None
                 t = TaskSpec(prefix + ins.name, engine, flops=sub.flops,
                              elems=sub.vector_elems, bytes_in=rd,
-                             bytes_out=wr, deps=deps)
+                             bytes_out=wr, deps=deps,
+                             gemm=g[:3] if g else None)
             elif op in ("copy", "copy-start", "transpose", "reshape",
                         "broadcast", "concatenate", "slice",
                         "dynamic-slice", "dynamic-update-slice"):

@@ -634,6 +634,11 @@ def resolve_workload(name: str) -> Callable[[], List[Op]]:
     to its op-list factory; raises KeyError for unknown names."""
     if name in WORKLOADS:
         return WORKLOADS[name]
+    if name.startswith("hlo/"):
+        # captured compiler graphs (imported lazily: ingest pulls in the
+        # HLO parser + fixture IO most callers never need)
+        from . import ingest
+        return ingest.resolve_hlo(name)
     p = parse_lm_name(name)
     if p is None:
         raise KeyError(
@@ -641,7 +646,8 @@ def resolve_workload(name: str) -> Callable[[], List[Op]]:
             f"'lm/<arch>/s<seq>b<batch>tp<tp>[ep<ep>]' or "
             f"'lm/<arch>/decode/kv<kv>b<batch>tp<tp>[ep<ep>]' or "
             f"'lm/<arch>/L<layers>/[train/|decode/]...[dp<dp>]"
-            f"[pod<chips>]'")
+            f"[pod<chips>]' or 'hlo/<fixture>[@L<k>]' (captured HLO "
+            f"graphs, see graph/ingest.py)")
     cfg = p["cfg"]
 
     if p["layers"]:

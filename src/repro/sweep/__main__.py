@@ -5,6 +5,7 @@
   python -m repro.sweep show <builtin-name>
   python -m repro.sweep cache [dir] [--prune]
   python -m repro.sweep crosscheck <workload> [--n-tiles N] [--preset P]
+  python -m repro.sweep crosscheck-hlo [spec] [--engine E] [--no-cache]
 
 ``run`` prints a per-phase progress log, a ``name,value`` CSV summary
 block, and writes the campaign record JSON (default:
@@ -180,6 +181,54 @@ def cmd_crosscheck(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_crosscheck_hlo(args: argparse.Namespace) -> int:
+    """Run the builtin ``hlo_crosscheck`` campaign — every captured-HLO
+    fixture and its hand-built twin through the analytic pre-screen and
+    refinement — and report per-fixture deviation ratios against the
+    bands documented in ``src/repro/configs/hlo/manifest.json``.
+    Exit 1 when any cell lands out of band."""
+    spec = _load_spec(args.spec)
+    if spec is None:
+        return 2
+    if args.engine:
+        spec.refine.engine = args.engine
+    cache_dir = None if args.no_cache else (
+        args.cache_dir or spec.cache_dir or DEFAULT_CACHE_DIR)
+    out = args.out or _default_out(spec.name)
+    res = run_campaign(spec, workers=args.workers,
+                       use_cache=not args.no_cache, cache_dir=cache_dir,
+                       backend=args.backend,
+                       progress=lambda m: print(f"  [{spec.name}] {m}"))
+    save_result(res, out)
+    xck = res.summary.get("hlo_crosscheck")
+    if not xck:
+        print("error: campaign paired no hlo/<fixture> records with "
+              "twins — check the spec's workloads", file=sys.stderr)
+        return 2
+    print(f"campaign,{spec.name},")
+    print(f"grid_points,{res.summary['grid_points']},"
+          f"{res.summary['cells']} cells")
+    print(f"refined,{res.summary['refined']},"
+          f"{res.summary['cache_hits']} cache hits")
+    ok = True
+    for fx, s in sorted(xck.items()):
+        in_band = s["in_band"] == s["cells"]
+        ok = ok and in_band
+        print(f"fixture,{fx},{s['in_band']}/{s['cells']} cells in band "
+              f"{s['band']} vs {s['twin']}")
+        print(f"analytic_ratio,{s['analytic_ratio_min']:.4g},"
+              f"max {s['analytic_ratio_max']:.4g} (ingested/hand-built)")
+    refined_ratios = [r["hlo_deviation"]["refined_ratio"]
+                      for r in res.records
+                      if "refined_ratio" in r.get("hlo_deviation", {})]
+    if refined_ratios:
+        print(f"refined_ratio,{min(refined_ratios):.4g},"
+              f"max {max(refined_ratios):.4g} (both engines refined)")
+    print(f"artifact,{out},")
+    print(f"in_band,{str(ok).lower()},")
+    return 0 if ok else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sweep",
                                  description=__doc__)
@@ -242,6 +291,25 @@ def main(argv=None) -> int:
     xp.add_argument("--preset", default="v5e")
     xp.add_argument("--pti-ns", type=float, default=100_000.0)
     xp.set_defaults(fn=cmd_crosscheck)
+
+    hp = sub.add_parser(
+        "crosscheck-hlo",
+        help="run the builtin hlo_crosscheck campaign: captured HLO "
+             "graphs vs their hand-built twins, deviation ratios "
+             "checked against the fixture manifest's documented bands")
+    hp.add_argument("spec", nargs="?", default="hlo_crosscheck",
+                    help="spec JSON path or builtin name "
+                         "(default: hlo_crosscheck)")
+    hp.add_argument("--backend", choices=("inline", "pool", "spool"),
+                    default=None)
+    hp.add_argument("--workers", type=int, default=0)
+    hp.add_argument("--no-cache", action="store_true")
+    hp.add_argument("--cache-dir", default=None)
+    hp.add_argument("--out", default=None)
+    hp.add_argument("--engine", choices=("event", "fast", "auto"),
+                    default=None,
+                    help="override the spec's refine engine")
+    hp.set_defaults(fn=cmd_crosscheck_hlo)
 
     args = ap.parse_args(argv)
     return args.fn(args)

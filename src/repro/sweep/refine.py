@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core import batchsim, fastsim
+from ..graph import ingest
 from ..graph.compiler import CompileOptions, CompiledWorkload, compile_ops
 from ..graph.workloads import lm_workload_name, parse_lm_name, \
     resolve_workload
@@ -78,6 +79,10 @@ def resolve_engine(engine: str, workload: str) -> str:
     """Collapse ``auto`` to a concrete engine for one workload."""
     if engine != "auto":
         return engine
+    h = ingest.parse_hlo_name(workload)
+    if h is not None:
+        layers = _hlo_layers(h)
+        return "fast" if layers >= fastsim.FAST_MIN_LAYERS else "event"
     try:
         p = parse_lm_name(workload)
     except KeyError:
@@ -85,6 +90,17 @@ def resolve_engine(engine: str, workload: str) -> str:
     if p and p["layers"] and p["layers"] >= fastsim.FAST_MIN_LAYERS:
         return "fast"
     return "event"
+
+
+def _hlo_layers(parsed: Dict[str, Any]) -> int:
+    """Layer-block count of a parsed ``hlo/...`` name (0 when the
+    fixture is unknown — resolution will fail loudly later anyway)."""
+    if parsed["layers_keep"] is not None:
+        return parsed["layers_keep"]
+    try:
+        return int(ingest.fixture_meta(parsed["fixture"]).get("layers", 0))
+    except KeyError:
+        return 0
 
 
 def _compile(payload: Dict[str, Any]) -> Tuple[HwConfig, int,
@@ -102,6 +118,24 @@ def _reduced_workloads(workload: str) -> List[str]:
     transient varies with phase AND problem size, so a shallow attempt
     that fails its lock-in check retries deeper); empty when the
     workload is not an extrapolation candidate."""
+    h = ingest.parse_hlo_name(workload)
+    if h is not None:
+        if h["layers_keep"] is not None:      # already a reduced twin
+            return []
+        layers = _hlo_layers(h)
+        if layers < fastsim.FAST_MIN_LAYERS:
+            return []
+        phase = ""
+        try:
+            phase = ingest.fixture_meta(h["fixture"]).get("phase", "")
+        except KeyError:
+            pass
+        depths = [fastsim.FAST_REPLAY_LAYERS_BY_PHASE.get(
+            phase, fastsim.FAST_REPLAY_LAYERS)]
+        if fastsim.FAST_REPLAY_LAYERS not in depths:
+            depths.append(fastsim.FAST_REPLAY_LAYERS)
+        return [ingest.hlo_workload_name(h["fixture"], layers=r)
+                for r in depths if r < layers]
     try:
         p = parse_lm_name(workload)
     except KeyError:

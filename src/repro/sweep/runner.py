@@ -44,7 +44,7 @@ from .refine import plan_batches, refine_payload
 from .spec import SweepSpec
 
 __all__ = ["CampaignResult", "run_campaign", "save_result", "load_result",
-           "default_spool_dir"]
+           "default_spool_dir", "annotate_hlo_crosscheck"]
 
 RESULT_SCHEMA = 1
 
@@ -123,6 +123,76 @@ def _resolve_backend(backend: Union[str, Backend, None],
     if backend == "spool" and not spool_dir:
         spool_dir = default_spool_dir(spec.name, cache_dir)
     return get_backend(backend, workers=workers, spool_dir=spool_dir)
+
+
+def annotate_hlo_crosscheck(records: List[Dict[str, Any]]
+                            ) -> Optional[Dict[str, Any]]:
+    """Pair every ingested ``hlo/<fixture>`` record with its hand-built
+    twin record at the same (overrides, n_tiles) point and attach the
+    deviation ratios the differential harness asserts on.
+
+    Each paired record gains ``hlo_twin`` (the twin workload name) and
+    ``hlo_deviation`` — analytic-latency / FLOP / HBM-byte ratios
+    (ingested over hand-built), a refined-latency ratio when both points
+    were refined, the fixture's documented band from the manifest, and
+    the in-band verdict. Returns the per-fixture summary (cells checked,
+    in-band count, ratio extrema) or None when the campaign pairs
+    nothing — ``run_campaign`` runs this after refinement on every
+    campaign, so crosscheck results land in records/summary/golden
+    fixtures uniformly across backends.
+    """
+    from ..graph import ingest
+
+    def pt_key(workload: str, rec: Dict[str, Any]) -> str:
+        return json.dumps([workload, rec["overrides"], rec["n_tiles"]],
+                          sort_keys=True)
+
+    by_key = {pt_key(r["workload"], r): r for r in records}
+    summary: Dict[str, Any] = {}
+    for rec in records:
+        h = ingest.parse_hlo_name(rec["workload"])
+        if h is None or h["layers_keep"] is not None:
+            continue
+        try:
+            meta = ingest.fixture_meta(h["fixture"])
+        except KeyError:
+            continue                       # fixture gone: nothing to pair
+        twin = by_key.get(pt_key(meta["twin"], rec))
+        if twin is None:
+            continue
+        band = meta.get("band")
+
+        def ratio(key: str) -> Optional[float]:
+            a, b = rec.get(key), twin.get(key)
+            if a is None or not b:
+                return None
+            return float(a) / float(b)
+
+        dev: Dict[str, Any] = {
+            "analytic_ratio": ratio("analytic_time_ns"),
+            "flops_ratio": ratio("total_flops"),
+            "hbm_ratio": ratio("hbm_bytes"),
+            "band": band,
+        }
+        if rec.get("refined") and twin.get("refined"):
+            dev["refined_ratio"] = ratio("time_ns")
+        dev["in_band"] = (band is not None and dev["analytic_ratio"]
+                          is not None and
+                          band[0] <= dev["analytic_ratio"] <= band[1])
+        rec["hlo_twin"] = meta["twin"]
+        rec["hlo_deviation"] = dev
+        s = summary.setdefault(h["fixture"], {
+            "twin": meta["twin"], "band": band, "cells": 0, "in_band": 0,
+            "analytic_ratio_min": None, "analytic_ratio_max": None})
+        s["cells"] += 1
+        s["in_band"] += int(dev["in_band"])
+        r = dev["analytic_ratio"]
+        if r is not None:
+            s["analytic_ratio_min"] = (r if s["analytic_ratio_min"] is None
+                                       else min(s["analytic_ratio_min"], r))
+            s["analytic_ratio_max"] = (r if s["analytic_ratio_max"] is None
+                                       else max(s["analytic_ratio_max"], r))
+    return summary or None
 
 
 def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
@@ -334,6 +404,12 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
          f"({cache_hits} cache hits, {len(misses)} simulated, "
          f"{refine_s:.2f}s)")
 
+    hlo_xck = annotate_hlo_crosscheck(records)
+    if hlo_xck:
+        for fx, s in sorted(hlo_xck.items()):
+            _log(progress, f"hlo crosscheck {fx}: {s['in_band']}/"
+                 f"{s['cells']} cells in band {s['band']}")
+
     summary = {
         "grid_points": len(records),
         "serve_points": len(serve_pts),
@@ -349,6 +425,8 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         "deviation_min": min(deviations) if deviations else None,
         "deviation_max": max(deviations) if deviations else None,
     }
+    if hlo_xck:
+        summary["hlo_crosscheck"] = hlo_xck
     best = _best(records, "time_ns")
     if best is not None:
         summary["best_time_point"] = {

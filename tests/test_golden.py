@@ -92,6 +92,22 @@ def _specs():
             preset="v5e", axes={"dcn_gbps": [50.0, 100.0]}, n_tiles=[2],
             refine=RefineSpec(mode="all", pti_ns=50_000.0, engine="fast",
                               batch=8)),
+        # captured-HLO ingestion (ISSUE 9): one ingested graph + its
+        # hand-built twin (the run_campaign crosscheck annotation pairs
+        # them into frozen hlo_deviation ratios) plus their L4 reduced
+        # forms (the fast engine's exact-replay fallback path on
+        # ingested graphs). engine="fast" is explicit so the frozen
+        # records are lane-independent: the 28-layer pair extrapolates
+        # deterministically, the L4 pair falls back to bitwise replay
+        "hlo_crosscheck_slice": SweepSpec(
+            name="hlo_crosscheck_slice",
+            workloads=["hlo/qwen2_1_5b_prefill",
+                       "lm/qwen2-1.5b/L28/s128b1tp1",
+                       "hlo/qwen2_1_5b_prefill@L4",
+                       "lm/qwen2-1.5b/L4/s128b1tp1"],
+            preset="v5e", axes={"clock_ghz": [0.6, 0.94]}, n_tiles=[2],
+            refine=RefineSpec(mode="pareto", max_points=1,
+                              pti_ns=50_000.0, engine="fast")),
         # refine.engine="fast": 16-layer points actually take the
         # steady-state extrapolation path (ISSUE 5), so this slice locks
         # both the fast engine's determinism across backends and its

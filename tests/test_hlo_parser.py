@@ -112,6 +112,100 @@ def test_extract_tasks_dag():
         assert all(0 <= d < i + 1 for d in t.deps)
 
 
+# -- regression: gaps ingestion hit (synthetic HLO — CPU-compiled modules
+# -- never carry async -start collectives or exotic dtypes) ---------------
+
+_ASYNC_AR = """\
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  %ar = (f32[1024], f32[1024]) all-reduce-start(%p0), replica_groups=[4,2]<=[8], to_apply=%add
+  ROOT %done = f32[1024] all-reduce-done(%ar)
+}
+"""
+
+
+def test_all_reduce_start_payload_not_double_counted():
+    """An async ``-start`` op types its output as a tuple carrying BOTH
+    the operand alias and the result — naive output-byte accounting
+    counts the 4 KiB payload twice. The payload must equal the operand
+    bytes and the ``-done`` half must contribute nothing."""
+    s = summarize(_ASYNC_AR)
+    assert len(s.collectives) == 1
+    c = s.collectives[0]
+    assert c.op == "all-reduce"                  # -start suffix stripped
+    assert c.payload_bytes == 1024 * 4           # NOT 2x
+    assert c.group_size == 2
+    # hbm side: operand read + effective output write, not the tuple
+    assert s.hbm_bytes == 2 * 1024 * 4
+
+    tasks = extract_tasks(_ASYNC_AR)
+    ici = [t for t in tasks if t.engine == "ici"]
+    assert len(ici) == 1                         # -done emits no task
+    assert ici[0].collective.payload_bytes == 1024 * 4
+    assert ici[0].bytes_out == 1024 * 4
+
+
+def test_all_gather_start_payload():
+    text = _ASYNC_AR.replace(
+        "(f32[1024], f32[1024]) all-reduce-start(%p0), "
+        "replica_groups=[4,2]<=[8], to_apply=%add",
+        "(f32[1024], f32[4096]) all-gather-start(%p0), "
+        "replica_groups=[2,4]<=[8], dimensions={0}").replace(
+        "f32[1024] all-reduce-done", "f32[4096] all-gather-done")
+    s = summarize(text)
+    assert len(s.collectives) == 1
+    # gather output is genuinely larger than the operand: payload is the
+    # de-aliased output (4096 elems), not operand + output
+    assert s.collectives[0].payload_bytes == 4096 * 4
+    assert s.collectives[0].group_size == 4
+
+
+def test_sync_all_reduce_unchanged():
+    """Non-start collectives (bare array output) keep exact payloads —
+    the de-aliasing is a no-op for them."""
+    text = _ASYNC_AR.replace(
+        "(f32[1024], f32[1024]) all-reduce-start(%p0)",
+        "f32[1024] all-reduce(%p0)").replace(
+        "f32[1024] all-reduce-done(%ar)", "f32[1024] negate(%ar)")
+    s = summarize(text)
+    assert s.collectives[0].payload_bytes == 1024 * 4
+
+
+def test_unknown_dtype_warns_once():
+    import warnings as w
+
+    from repro.graph import hlo_parser
+
+    text = _ASYNC_AR.replace("f32[1024]", "f4e2m1[1024]")
+    hlo_parser._WARNED_DTYPES.discard("f4e2m1")
+    with w.catch_warnings(record=True) as rec:
+        w.simplefilter("always")
+        summarize(text)
+        first = [x for x in rec if "f4e2m1" in str(x.message)]
+    assert len(first) == 1                       # once, not per shape
+    assert "DTYPE_BYTES" in str(first[0].message)
+    with w.catch_warnings(record=True) as rec2:
+        w.simplefilter("always")
+        summarize(text)
+    assert not [x for x in rec2 if "f4e2m1" in str(x.message)]
+
+
+def test_known_dtypes_do_not_warn():
+    import warnings as w
+
+    with w.catch_warnings():
+        w.simplefilter("error")
+        summarize(_ASYNC_AR)
+
+
 @pytest.mark.skipif(not os.path.isdir(ART), reason="no dry-run artifacts")
 def test_artifact_sanity():
     import gzip

@@ -1,0 +1,206 @@
+"""Differential harness for captured-HLO ingestion (graph/ingest.py).
+
+Four contracts, per fixture under ``src/repro/configs/hlo/``:
+
+* conservation — the ingested ``CompiledWorkload``'s total FLOPs and
+  HBM bytes stay within 5% of ``hlo_parser.summarize``'s independent
+  trip-aware totals of the same text;
+* deviation — the analytic pre-screen latency of the ingested graph vs
+  its hand-built ``lm/...`` twin lands in the per-fixture band
+  documented in the fixture manifest (the ``hlo_crosscheck`` campaign's
+  acceptance bar, asserted here through the real campaign path);
+* engine agreement — the fast engine extrapolates ingested graphs from
+  their ``@L<k>`` reduced twins with intervals matching a full event
+  replay to noise (<= 1e-3 ns absolute, <= 1e-9 relative records);
+* determinism — same HLO text, same byte-identical op table and
+  structural hash (hypothesis property).
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import ingest
+from repro.graph.compiler import CompileOptions, compile_ops
+from repro.graph.hlo_parser import summarize
+from repro.graph.workloads import is_workload, resolve_workload
+from repro.hw.presets import resolve_preset, to_dict
+
+FIXTURES = ingest.fixture_names()
+assert FIXTURES, "HLO fixtures missing — run tools/gen_hlo_fixtures.py"
+
+
+# -- conservation ----------------------------------------------------------
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_compiled_totals_within_5pct_of_summarize(fixture):
+    meta = ingest.fixture_meta(fixture)
+    text = ingest.load_fixture(fixture)
+    s = summarize(text, pod_size=int(meta.get("pod_size", 0)))
+    cfg = resolve_preset("v5e")
+    cw = compile_ops(resolve_workload(f"hlo/{fixture}")(), cfg,
+                     CompileOptions(n_tiles=2))
+    # Op.flops is 2mnk for matmuls and elems for eltwise ops, so the
+    # compiled total tracks the parser's mxu + vector work combined
+    assert cw.total_flops == pytest.approx(s.flops + s.vector_elems,
+                                           rel=0.05)
+    assert cw.hbm_bytes == pytest.approx(s.hbm_bytes, rel=0.05)
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_report_matches_parser(fixture):
+    meta = ingest.fixture_meta(fixture)
+    _, rep = ingest.ingest_fixture(fixture)
+    text = ingest.load_fixture(fixture)
+    s = summarize(text, pod_size=int(meta.get("pod_size", 0)))
+    assert rep.mxu_flops == pytest.approx(s.flops, rel=0.05)
+    assert rep.vector_elems == pytest.approx(s.vector_elems, rel=0.05)
+    assert rep.n_layers == meta["layers"]
+    assert rep.layer_ops > 0
+    assert rep.dropped_collectives == 0
+
+
+# -- layer blocks / reduced twins ------------------------------------------
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_layer_blocks_lead_and_reduce(fixture):
+    ops, rep = ingest.ingest_fixture(fixture)
+    # fastsim's _block_slices contract: L0 opens the list, blocks are
+    # contiguous and ascending, non-layer ops form the tail
+    labels = [op.name.split(".")[0] for op in ops]
+    assert labels[0] == "L0"
+    seen_tail = False
+    last = -1
+    for lab in labels:
+        if lab.startswith("L") and lab[1:].isdigit():
+            assert not seen_tail, "layer block after tail began"
+            li = int(lab[1:])
+            assert li in (last, last + 1)
+            last = max(last, li)
+        else:
+            seen_tail = True
+    assert last == rep.n_layers - 1
+
+    red_ops, red = ingest.ingest_fixture(fixture, layers_keep=4)
+    assert red.n_layers == 4
+    # reduction keeps the non-layer head/tail intact
+    full_tail = [o.name for o in ops if not o.name.startswith("L")]
+    red_tail = [o.name for o in red_ops if not o.name.startswith("L")]
+    assert red_tail == full_tail
+    assert len(red_ops) < len(ops)
+
+
+def test_bad_names_raise_keyerror():
+    with pytest.raises(KeyError, match="hlo/"):
+        resolve_workload("hlo/")
+    with pytest.raises(KeyError, match="unknown HLO fixture"):
+        resolve_workload("hlo/no_such_fixture")
+    with pytest.raises(KeyError, match="out of range"):
+        resolve_workload(f"hlo/{FIXTURES[0]}@L999")
+    assert is_workload(f"hlo/{FIXTURES[0]}")
+    assert is_workload(f"hlo/{FIXTURES[0]}@L4")
+
+
+def test_twins_resolve():
+    for fx in FIXTURES:
+        assert is_workload(ingest.twin_name(fx))
+        # reduced-twin rewrite targets the layer segment
+        assert "/L4/" in ingest.twin_name(fx, layers=4)
+
+
+def test_engine_routing():
+    from repro.sweep.refine import _reduced_workloads, resolve_engine
+
+    for fx in FIXTURES:
+        name = f"hlo/{fx}"
+        assert resolve_engine("auto", name) == "fast"
+        assert resolve_engine("auto", name + "@L4") == "event"
+        reduced = _reduced_workloads(name)
+        assert reduced and all(r.startswith(name + "@L") for r in reduced)
+        assert _reduced_workloads(name + "@L4") == []
+
+
+# -- deviation band (the crosscheck campaign's acceptance bar) -------------
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_analytic_deviation_in_documented_band(fixture):
+    """Run the builtin hlo_crosscheck campaign's pre-screen (refinement
+    off — the band is an analytic-latency contract) and assert every
+    cell of this fixture lands inside its manifest band."""
+    res = _campaign()
+    xck = res.summary["hlo_crosscheck"]
+    assert fixture in xck, f"campaign never paired {fixture}"
+    s = xck[fixture]
+    assert s["band"] == ingest.fixture_meta(fixture)["band"]
+    assert s["cells"] >= 2
+    assert s["in_band"] == s["cells"], (
+        f"{fixture}: analytic ratio range "
+        f"[{s['analytic_ratio_min']:.3f}, {s['analytic_ratio_max']:.3f}] "
+        f"escapes documented band {s['band']}")
+    lo, hi = s["band"]
+    assert lo <= s["analytic_ratio_min"] <= s["analytic_ratio_max"] <= hi
+
+
+def test_crosscheck_records_carry_deviation():
+    res = _campaign()
+    hlo_recs = [r for r in res.records if r["workload"].startswith("hlo/")]
+    assert hlo_recs
+    for r in hlo_recs:
+        dev = r["hlo_deviation"]
+        assert r["hlo_twin"] == ingest.twin_name(
+            ingest.parse_hlo_name(r["workload"])["fixture"])
+        assert dev["in_band"]
+        assert dev["analytic_ratio"] > 0
+        assert dev["flops_ratio"] == pytest.approx(1.0, rel=0.2)
+        assert dev["hbm_ratio"] > 1.0     # f32 capture + no-reuse bytes
+
+
+_CAMPAIGN_CACHE = []
+
+
+def _campaign():
+    if not _CAMPAIGN_CACHE:
+        from repro.sweep.runner import run_campaign
+        from repro.sweep.spec import load_builtin_spec
+
+        spec = load_builtin_spec("hlo_crosscheck")
+        spec.refine.mode = "none"       # band is an analytic contract
+        _CAMPAIGN_CACHE.append(
+            run_campaign(spec, workers=0, use_cache=False))
+    return _CAMPAIGN_CACHE[0]
+
+
+# -- engine agreement ------------------------------------------------------
+
+@pytest.mark.slow
+def test_fast_engine_extrapolates_ingested_graph():
+    from repro.sweep.refine import crosscheck_point, refine_payload
+
+    payload = refine_payload(
+        workload="hlo/qwen2_1_5b_prefill", n_tiles=2,
+        hw=to_dict(resolve_preset("v5e")), compile_opts={},
+        pti_ns=50_000.0, temp_c=65.0, keep_series=False, engine="fast")
+    out = crosscheck_point(payload)
+    assert out["extrapolated"], "28-layer ingested graph must extrapolate"
+    assert out["replayed_tasks"] < out["n_tasks"] / 4
+    assert out["max_interval_diff_ns"] < 1e-3
+    assert out["makespan_diff_ns"] < 1e-3
+    assert max(out["record_rel_diff"].values()) < 1e-9
+
+
+# -- determinism (property) ------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(FIXTURES),
+       st.sampled_from([None, 4, 6]))
+def test_ingestion_deterministic(fixture, layers_keep):
+    text = ingest.load_fixture(fixture)
+    from repro.graph.hlo_parser import extract_tasks
+
+    meta = ingest.fixture_meta(fixture)
+    runs = [ingest.lower_tasks(
+        extract_tasks(text, pod_size=int(meta.get("pod_size", 0))),
+        layers_keep=layers_keep) for _ in range(2)]
+    (ops_a, rep_a), (ops_b, rep_b) = runs
+    assert ops_a == ops_b                       # byte-identical op table
+    assert rep_a.structural_hash == rep_b.structural_hash
+    assert rep_a == rep_b
+    assert rep_a.structural_hash == ingest.structural_hash(ops_a)

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Staleness check for the captured-HLO workload fixtures (CI gate).
+
+Stdlib-only — runs without jax or even the repro package installed.
+Verifies, for ``src/repro/configs/hlo/``:
+
+* ``manifest.json`` exists, names its generator, and every fixture entry
+  carries the required keys (file, sha256, twin, layers, phase, band);
+* every referenced ``.hlo.txt.gz`` exists and its *decompressed* text
+  hashes to the recorded SHA-256 (the fixture-vs-manifest staleness
+  contract: regenerating a capture without ``tools/gen_hlo_fixtures.py``
+  fails here);
+* no orphan ``.hlo.txt.gz`` files sit next to the manifest unlisted;
+* bands are sane ([lo, hi] with 0 < lo <= hi).
+
+Exit 0 clean, 1 with one line per problem.
+"""
+import gzip
+import hashlib
+import json
+import os
+
+REQUIRED_KEYS = ("file", "sha256", "twin", "layers", "phase", "band")
+
+
+def check(fixture_dir: str) -> int:
+    problems = []
+    man_path = os.path.join(fixture_dir, "manifest.json")
+    if not os.path.exists(man_path):
+        print(f"PROBLEM: {man_path} missing")
+        return 1
+    with open(man_path) as f:
+        man = json.load(f)
+    if man.get("generator") != "tools/gen_hlo_fixtures.py":
+        problems.append(f"{man_path}: generator field missing/wrong")
+    fixtures = man.get("fixtures", {})
+    if not fixtures:
+        problems.append(f"{man_path}: no fixtures")
+    listed = set()
+    for name, meta in sorted(fixtures.items()):
+        missing = [k for k in REQUIRED_KEYS if k not in meta]
+        if missing:
+            problems.append(f"{name}: manifest entry missing {missing}")
+            continue
+        listed.add(meta["file"])
+        band = meta["band"]
+        if (not isinstance(band, list) or len(band) != 2
+                or not 0 < band[0] <= band[1]):
+            problems.append(f"{name}: malformed band {band!r}")
+        path = os.path.join(fixture_dir, meta["file"])
+        if not os.path.exists(path):
+            problems.append(f"{name}: {meta['file']} missing")
+            continue
+        with gzip.open(path, "rb") as gz:
+            digest = hashlib.sha256(gz.read()).hexdigest()
+        if digest != meta["sha256"]:
+            problems.append(
+                f"{name}: {meta['file']} is stale — decompressed text "
+                f"hashes to {digest[:12]}..., manifest says "
+                f"{meta['sha256'][:12]}...; rerun tools/gen_hlo_fixtures.py")
+    for fn in sorted(os.listdir(fixture_dir)):
+        if fn.endswith(".hlo.txt.gz") and fn not in listed:
+            problems.append(f"orphan fixture {fn}: not in manifest.json")
+    for p in problems:
+        print(f"PROBLEM: {p}")
+    if not problems:
+        print(f"{len(fixtures)} HLO fixtures fresh "
+              f"(hashes match manifest.json)")
+    return 1 if problems else 0
+
+
+def main() -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return check(os.path.join(repo, "src", "repro", "configs", "hlo"))
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

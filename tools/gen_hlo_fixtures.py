@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Regenerate the captured-HLO workload fixtures under
+``src/repro/configs/hlo/``.
+
+Each fixture is the scheduled HLO text of one real jax program —
+``launch.programs.build_program(arch, shape, mesh).lower().compile()
+.as_text()`` — gzipped next to a ``manifest.json`` entry recording the
+generation parameters, the hand-built twin workload name, the documented
+hand-built-vs-ingested analytic deviation band, and the SHA-256 of the
+decompressed text. ``tools/check_fixtures.py`` (stdlib-only, runs in CI)
+verifies hashes and manifest shape without importing jax; this script is
+the only thing that may rewrite the captures.
+
+Needs jax (CPU is fine — compiles take ~1s each); run from the repo
+root:
+
+    python tools/gen_hlo_fixtures.py [--out src/repro/configs/hlo]
+
+Bands are *preserved* from an existing manifest on regeneration (they
+are measured, documented numbers — see docs/CAMPAIGNS.md); a brand-new
+fixture starts with the permissive default and must be tightened after
+running ``python -m repro.sweep crosscheck-hlo``.
+"""
+import argparse
+import gzip
+import hashlib
+import json
+import os
+import sys
+
+# host-platform device count must be pinned before jax is imported, or
+# the tp2 capture cannot build its 1x2 mesh on a CPU host
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+DEFAULT_BAND = [0.2, 5.0]
+
+# (fixture, arch, seq/kv, batch, kind, mesh, twin)
+CAPTURES = [
+    ("qwen2_1_5b_prefill", "qwen2-1.5b", 128, 1, "prefill", (1, 1),
+     "lm/qwen2-1.5b/L28/s128b1tp1"),
+    ("qwen2_1_5b_decode", "qwen2-1.5b", 256, 4, "decode", (1, 1),
+     "lm/qwen2-1.5b/L28/decode/kv256b4tp1"),
+    ("qwen2_1_5b_prefill_tp2", "qwen2-1.5b", 128, 1, "prefill", (1, 2),
+     "lm/qwen2-1.5b/L28/s128b1tp2"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=os.path.join(
+        REPO, "src", "repro", "configs", "hlo"))
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.launch.mesh import make_mesh
+    from repro.launch.programs import build_program
+
+    os.makedirs(args.out, exist_ok=True)
+    man_path = os.path.join(args.out, "manifest.json")
+    old: dict = {"fixtures": {}}
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+
+    fixtures = {}
+    for name, arch, seq, batch, kind, mesh_shape, twin in CAPTURES:
+        cfg = get_config(arch)
+        shape = ShapeSpec(f"fx_{name}", seq, batch, kind)
+        mesh = make_mesh(mesh_shape, ("data", "model"))
+        text = build_program(cfg, shape, mesh).lower().compile().as_text()
+        fname = f"{name}.hlo.txt.gz"
+        # mtime=0 + fixed filename inside the archive keep regeneration
+        # byte-deterministic for identical HLO text
+        with open(os.path.join(args.out, fname), "wb") as raw:
+            with gzip.GzipFile(fileobj=raw, mode="wb", filename="",
+                               mtime=0) as gz:
+                gz.write(text.encode())
+        prev = old.get("fixtures", {}).get(name, {})
+        fixtures[name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "arch": arch,
+            "shape": {"seq_len": seq, "global_batch": batch, "kind": kind},
+            "mesh": list(mesh_shape),
+            "layers": cfg.n_layers,
+            "phase": kind,
+            "pod_size": 0,
+            "twin": twin,
+            "band": prev.get("band", list(DEFAULT_BAND)),
+        }
+        print(f"{name}: {len(text) / 1024:.0f} KB text -> {fname}")
+
+    with open(man_path, "w") as f:
+        json.dump({"generator": "tools/gen_hlo_fixtures.py",
+                   "fixtures": fixtures}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {man_path} ({len(fixtures)} fixtures)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
