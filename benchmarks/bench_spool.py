@@ -1,0 +1,118 @@
+"""Spool saturation benchmark: jobs/sec through the filesystem queue.
+
+Drives a synthetic job mix (trivial refine_fn, so the numbers measure
+the spool substrate — claim-by-rename, heartbeat leases, atomic
+publishes — not the simulator) through 1/2/4 concurrent workers on one
+spool, then times a janitor compaction pass over the finished ``done/``
+directory. Trajectory artifact (``BENCH_spool.json``), no gate: CI
+runners are 2-CPU and shared-filesystem latency varies too much to
+threshold, but regressions in the claim path show up clearly across
+commits.
+
+Run:  PYTHONPATH=src python benchmarks/bench_spool.py [--out PATH]
+          [--jobs N] [--workers 1,2,4]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+
+from repro.exec import Spool, run_worker
+from repro.exec.janitor import janitor_pass
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO, "BENCH_spool.json")
+
+
+def _refine(payload: dict) -> dict:
+    return {"out": payload["i"]}
+
+
+def _drain(root: str, n_workers: int) -> float:
+    threads = []
+    t0 = time.time()
+    for w in range(n_workers):
+        t = threading.Thread(
+            target=run_worker,
+            kwargs=dict(root=root, worker=f"bench-w{w}",
+                        refine_fn=_refine, hb_s=30.0),
+            daemon=True)
+        t.start()
+        threads.append(t)
+    for t in threads:
+        t.join()
+    return time.time() - t0
+
+
+def run(out_path: str = DEFAULT_OUT, *, jobs: int = 300,
+        workers: tuple = (1, 2, 4)) -> dict:
+    sweep = {}
+    compaction = None
+    for k in workers:
+        with tempfile.TemporaryDirectory() as td:
+            root = os.path.join(td, "sp")
+            spool = Spool(root)
+            t0 = time.time()
+            for i in range(jobs):
+                spool.submit(f"job{i:05d}", {"i": i})
+            submit_s = time.time() - t0
+            wall_s = _drain(root, k)
+            n_done = len(spool.done_keys())
+            assert n_done == jobs, f"{n_done}/{jobs} done with {k} workers"
+            sweep[f"workers_{k}"] = {
+                "jobs": jobs,
+                "submit_s": submit_s,
+                "submit_jobs_per_s": jobs / submit_s,
+                "drain_s": wall_s,
+                "jobs_per_s": jobs / wall_s,
+            }
+            if k == max(workers):
+                # compaction throughput over the full finished spool
+                t0 = time.time()
+                stats = janitor_pass(spool, tmp_age_s=-1.0,
+                                     corrupt_age_s=-1.0,
+                                     compact_age_s=-1.0)
+                compact_s = time.time() - t0
+                assert stats["compacted"] == jobs
+                assert len(spool.done_keys()) == jobs  # still all visible
+                compaction = {
+                    "files": jobs,
+                    "wall_s": compact_s,
+                    "files_per_s": jobs / compact_s,
+                }
+
+    out = {"bench": "spool", "jobs": jobs, "sweep": sweep,
+           "compaction": compaction}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+
+    base = sweep[f"workers_{workers[0]}"]["jobs_per_s"]
+    for k in workers:
+        s = sweep[f"workers_{k}"]
+        print(f"spool_jobs_per_s_w{k},{s['jobs_per_s']:.6g},"
+              f"x{s['jobs_per_s'] / base:.2f} vs 1 worker")
+    if compaction:
+        print(f"spool_compact_files_per_s,"
+              f"{compaction['files_per_s']:.6g},")
+    print(f"artifact,{out_path},")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--jobs", type=int, default=300)
+    ap.add_argument("--workers", default="1,2,4",
+                    help="comma-separated worker counts")
+    args = ap.parse_args()
+    workers = tuple(int(w) for w in args.workers.split(","))
+    run(args.out, jobs=args.jobs, workers=workers)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,12 +31,17 @@ __all__ = [
     "Backend",
     "BackendError",
     "CampaignJournal",
+    "FaultPlan",
+    "InjectedCrash",
     "InlineBackend",
     "JournalView",
     "PoolBackend",
+    "PublishError",
     "Spool",
     "SpoolBackend",
     "get_backend",
+    "janitor_pass",
+    "run_janitor",
     "run_worker",
 ]
 
@@ -45,19 +50,26 @@ _EXPORTS = {
     "BackendError": "backend",
     "InlineBackend": "backend",
     "get_backend": "backend",
+    "FaultPlan": "faults",
+    "InjectedCrash": "faults",
     "PoolBackend": "pool",
+    "PublishError": "spool",
     "Spool": "spool",
     "SpoolBackend": "spool",
     "CampaignJournal": "journal",
     "JournalView": "journal",
+    "janitor_pass": "janitor",
+    "run_janitor": "janitor",
     "run_worker": "worker",
 }
 
 if TYPE_CHECKING:  # pragma: no cover
     from .backend import Backend, BackendError, InlineBackend, get_backend
+    from .faults import FaultPlan, InjectedCrash
+    from .janitor import janitor_pass, run_janitor
     from .journal import CampaignJournal, JournalView
     from .pool import PoolBackend
-    from .spool import Spool, SpoolBackend
+    from .spool import PublishError, Spool, SpoolBackend
     from .worker import run_worker
 
 

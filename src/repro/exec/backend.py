@@ -49,7 +49,8 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, \
     runtime_checkable
 
 __all__ = ["Backend", "BackendError", "InlineBackend", "get_backend",
-           "BACKEND_NAMES", "is_batch_record"]
+           "BACKEND_NAMES", "is_batch_record", "is_failure_record",
+           "failure_record"]
 
 BACKEND_NAMES = ("inline", "pool", "spool")
 
@@ -72,7 +73,8 @@ class Backend(Protocol):
                keys: Optional[List[str]] = None,
                journal: Optional[Any] = None,
                cache: Optional[Any] = None,
-               progress: Progress = None) -> List[Record]:
+               progress: Progress = None,
+               allow_partial: bool = False) -> List[Record]:
         """Refine every payload; return records in payload order.
 
         ``keys`` are the content-hash job ids (one per payload — the
@@ -82,6 +84,12 @@ class Backend(Protocol):
         through to **as soon as it lands** — so a runner killed
         mid-batch loses nothing already refined, and the re-invocation
         sees those points as cache hits.
+
+        With ``allow_partial=True`` a payload whose refinement fails
+        yields a ``failure_record`` at its position (journaled as
+        ``failed``, never cached) instead of the whole call raising
+        ``BackendError`` — graceful degradation for long campaigns
+        where one poison cell must not discard 71 finished ones.
         """
         ...
 
@@ -94,8 +102,23 @@ def is_batch_record(rec: Record) -> bool:
     return rec.get("kind") == "batch" and "records" in rec and "keys" in rec
 
 
+def is_failure_record(rec: Record) -> bool:
+    """A degraded placeholder from an ``allow_partial`` run — the point
+    failed and carries a diagnosis instead of simulation results."""
+    return isinstance(rec, dict) and rec.get("kind") == "refine_failed"
+
+
+def failure_record(error: str, *, worker: str = "?") -> Record:
+    """The record shape a failed point degrades to under
+    ``allow_partial``: no simulation fields, ``failed: True``, and the
+    diagnosis attached. Never cached (a transient failure must not
+    poison future runs)."""
+    return {"kind": "refine_failed", "failed": True,
+            "error": str(error), "worker": worker}
+
+
 def _cache_put(cache, key: Optional[str], rec: Record) -> None:
-    if cache is None:
+    if cache is None or is_failure_record(rec):
         return
     if is_batch_record(rec):
         # per-point write-through under each item's own key — never
@@ -144,14 +167,25 @@ class InlineBackend:
                keys: Optional[List[str]] = None,
                journal: Optional[Any] = None,
                cache: Optional[Any] = None,
-               progress: Progress = None) -> List[Record]:
+               progress: Progress = None,
+               allow_partial: bool = False) -> List[Record]:
         from ..sweep.refine import refine_point
 
         keys = keys or [None] * len(payloads)
         out: List[Record] = []
         for payload, key in zip(payloads, keys):
             t0 = time.time()
-            rec = refine_point(payload)
+            try:
+                rec = refine_point(payload)
+            except Exception as e:
+                if not allow_partial:
+                    raise
+                rec = failure_record(e, worker="inline")
+                if journal is not None and key is not None:
+                    journal.point(key, "failed", worker="inline",
+                                  error=rec["error"])
+                out.append(rec)
+                continue
             _cache_put(cache, key, rec)
             _journal_done(journal, key, worker="inline",
                           wall_s=time.time() - t0, rec=rec)

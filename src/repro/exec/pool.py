@@ -17,7 +17,8 @@ from concurrent.futures import ProcessPoolExecutor
 from concurrent.futures.process import BrokenProcessPool
 from typing import Any, Dict, List, Optional
 
-from .backend import Progress, _cache_put, _journal_done
+from .backend import Progress, _cache_put, _journal_done, \
+    failure_record, is_failure_record
 
 __all__ = ["PoolBackend", "mp_start_method"]
 
@@ -44,7 +45,8 @@ class PoolBackend:
                keys: Optional[List[str]] = None,
                journal: Optional[Any] = None,
                cache: Optional[Any] = None,
-               progress: Progress = None) -> List[Dict[str, Any]]:
+               progress: Progress = None,
+               allow_partial: bool = False) -> List[Dict[str, Any]]:
         from ..sweep.refine import refine_point
 
         keys = keys or [None] * len(payloads)
@@ -62,12 +64,23 @@ class PoolBackend:
                     with ProcessPoolExecutor(
                             max_workers=min(self.workers, len(payloads)),
                             mp_context=ctx) as pool:
+                        # submit (not map): per-future results so one
+                        # failed point can degrade instead of poisoning
+                        # the whole ordered stream
+                        futs = [pool.submit(refine_point, p)
+                                for p in payloads]
                         fresh = []
-                        # consume map() as results arrive so each record
-                        # is cache-durable before the batch finishes
-                        for key, rec in zip(keys,
-                                            pool.map(refine_point,
-                                                     payloads)):
+                        # consume in order so each record is
+                        # cache-durable before the batch finishes
+                        for key, fut in zip(keys, futs):
+                            try:
+                                rec = fut.result()
+                            except BrokenProcessPool:
+                                raise
+                            except Exception as e:
+                                if not allow_partial:
+                                    raise
+                                rec = failure_record(e, worker=self.name)
                             _cache_put(cache, key, rec)
                             fresh.append(rec)
             except BrokenProcessPool:
@@ -77,13 +90,23 @@ class PoolBackend:
         if fresh is None:
             fresh = []
             for key, p in zip(keys, payloads):
-                rec = refine_point(p)
+                try:
+                    rec = refine_point(p)
+                except Exception as e:
+                    if not allow_partial:
+                        raise
+                    rec = failure_record(e, worker=self.name)
                 _cache_put(cache, key, rec)
                 fresh.append(rec)
-        # pool.map gives no per-point timing; journal the batch average
-        # (batch-job records expand to per-point events inside)
+        # the futures give no per-point timing; journal the batch
+        # average (batch-job records expand to per-point events inside)
         avg = (time.time() - t0) / max(len(payloads), 1)
         for key, rec in zip(keys, fresh):
+            if is_failure_record(rec):
+                if journal is not None and key is not None:
+                    journal.point(key, "failed", worker=self.name,
+                                  error=rec["error"])
+                continue
             _journal_done(journal, key, worker=self.name, wall_s=avg,
                           rec=rec)
         return fresh

@@ -228,6 +228,17 @@ def trace_campaign_journal(path: str) -> Dict[str, Any]:
                        cat=_STATUS_CATS.get(status, "instant"),
                        args={"status": status,
                              "error": ev.get("error")})
+    for ev in view.janitor_events:
+        # maintenance passes get their own lane so reclaim/GC activity
+        # is visually separable from refinement work
+        if not isinstance(ev.get("t"), (int, float)):
+            continue
+        stats = {k: v for k, v in ev.items()
+                 if k not in ("ev", "t", "worker")}
+        label = ",".join(f"{k}={v}" for k, v in sorted(stats.items())
+                         if v) or "pass"
+        tb.instant("campaign", "janitor", label, ts_us=us(ev["t"]),
+                   cat="janitor", args=stats)
     if view.end_ev is not None:
         tb.instant("campaign", "runner", "end", ts_us=us(view.end_ev["t"]),
                    args=view.end_ev.get("summary"))

@@ -73,6 +73,7 @@ def cmd_run(args: argparse.Namespace) -> int:
                        use_cache=not args.no_cache, cache_dir=cache_dir,
                        backend=args.backend, spool_dir=args.spool_dir,
                        journal_path=journal,
+                       allow_partial=args.allow_partial,
                        progress=lambda m: print(f"  [{spec.name}] {m}"))
     save_result(res, out)
     s = res.summary
@@ -82,6 +83,9 @@ def cmd_run(args: argparse.Namespace) -> int:
     print(f"backend,{s['backend']},")
     print(f"refined,{s['refined']},{s['cache_hits']} cache hits / "
           f"{s['simulated']} simulated")
+    if s.get("failed"):
+        print(f"failed,{s['failed']},coverage {s['coverage']:.3f} "
+              f"(--allow-partial degraded points)")
     print(f"refine_s,{s['refine_s']:.3g},")
     if s.get("deviation_max") is not None:
         print(f"deviation_range,{s['deviation_min']:.3g},"
@@ -266,6 +270,11 @@ def main(argv=None) -> int:
                     help="override the spec's refine.batch: max points "
                          "per batched cross-point refinement job "
                          "(0/1 = per-point, the default)")
+    rp.add_argument("--allow-partial", action="store_true",
+                    help="graceful degradation: failed/quarantined "
+                         "points become status:failed records with the "
+                         "error attached instead of aborting the "
+                         "campaign; the summary reports coverage")
     rp.set_defaults(fn=cmd_run)
 
     lp = sub.add_parser("list", help="list builtin campaign specs")

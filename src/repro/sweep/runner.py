@@ -32,7 +32,8 @@ import numpy as np
 
 # fresh records are canonicalized (JSON round-trip, sorted keys) so
 # in-memory results match cache/spool-served ones byte-for-byte
-from ..exec.backend import Backend, canonical as _canon, get_backend
+from ..exec.backend import Backend, canonical as _canon, get_backend, \
+    is_failure_record
 from ..exec.journal import CampaignJournal
 from ..hw.presets import to_dict
 from ..obs.metrics import REGISTRY
@@ -201,7 +202,8 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
                  progress: Optional[Callable[[str], None]] = None,
                  backend: Union[str, Backend, None] = None,
                  spool_dir: Optional[str] = None,
-                 journal_path: Optional[str] = None) -> CampaignResult:
+                 journal_path: Optional[str] = None,
+                 allow_partial: bool = False) -> CampaignResult:
     """Execute one campaign.
 
     ``backend`` picks the refinement execution service: ``"inline"``
@@ -215,6 +217,13 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
     The cache (``cache_dir`` or ``spec.cache_dir``) makes repeated and
     interrupted campaigns incremental; ``journal_path`` streams
     per-point status/wall-time/worker telemetry as JSONL.
+
+    ``allow_partial=True`` is graceful degradation: a point whose
+    refinement fails (or is quarantined as a poison job by the spool)
+    becomes a ``status: "failed"`` record with the error attached
+    instead of a ``BackendError`` aborting the whole campaign; the
+    summary reports ``failed``/``coverage``/``failed_points`` so
+    reports can annotate what's missing.
     """
     t_start = time.time()
     cells = spec.cells()
@@ -341,6 +350,9 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         misses = list(range(len(todo)))
 
     if misses:
+        # keyword passed only when set, so minimal Backend stand-ins
+        # (tests, external plugins) predating allow_partial keep working
+        bk_extra = {"allow_partial": True} if allow_partial else {}
         batch_n = spec.refine.batch
         if batch_n > 1:
             # batched cross-point refinement: group fast-engine misses
@@ -365,11 +377,15 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
                                  backend=bk.name).inc(len(jobs))
             fresh = bk.refine(job_payloads, keys=job_keys,
                               journal=journal, cache=cache,
-                              progress=progress)
+                              progress=progress, **bk_extra)
             for (jp, pos), rec in zip(jobs, fresh):
                 if rec.get("kind") == "batch":
                     for p_i, sub in zip(pos, rec["records"]):
                         results[misses[p_i]] = _canon(sub)
+                elif is_failure_record(rec):
+                    # a failed batch job degrades every point it carried
+                    for p_i in pos:
+                        results[misses[p_i]] = _canon(rec)
                 else:
                     results[misses[pos[0]]] = _canon(rec)
         else:
@@ -381,7 +397,7 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
             fresh = bk.refine([todo[i] for i in misses],
                               keys=[keys[i] for i in misses],
                               journal=journal, cache=cache,
-                              progress=progress)
+                              progress=progress, **bk_extra)
             for i, rec in zip(misses, fresh):
                 results[i] = _canon(rec)
     refine_s = time.time() - t0
@@ -392,9 +408,19 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
                          ).inc(len(misses))
 
     deviations = []
+    failed_points: List[str] = []
     for i, res in enumerate(results):
         assert res is not None
         rec = records[todo_idx[i]]
+        if is_failure_record(res):
+            # graceful degradation: the point is terminal-but-failed;
+            # `refined` stays False so _best/reports skip it, and the
+            # diagnosis travels with the record
+            rec["status"] = "failed"
+            rec["failed"] = True
+            rec["error"] = res.get("error", "?")
+            failed_points.append(rec["point_id"])
+            continue
         rec.update(res)
         rec["refined"] = True
         if rec.get("analytic_time_ns", 0) > 0:
@@ -402,7 +428,7 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
             deviations.append(rec["deviation"])
     _log(progress, f"refine: {len(todo)} points "
          f"({cache_hits} cache hits, {len(misses)} simulated, "
-         f"{refine_s:.2f}s)")
+         f"{len(failed_points)} failed, {refine_s:.2f}s)")
 
     hlo_xck = annotate_hlo_crosscheck(records)
     if hlo_xck:
@@ -425,6 +451,11 @@ def run_campaign(spec: SweepSpec, *, workers: Optional[int] = 0,
         "deviation_min": min(deviations) if deviations else None,
         "deviation_max": max(deviations) if deviations else None,
     }
+    if failed_points:
+        summary["failed"] = len(failed_points)
+        summary["failed_points"] = failed_points
+        summary["coverage"] = ((len(todo) - len(failed_points))
+                               / len(todo) if todo else 1.0)
     if hlo_xck:
         summary["hlo_crosscheck"] = hlo_xck
     best = _best(records, "time_ns")

@@ -83,7 +83,9 @@ def test_spool_claim_exclusive_under_concurrency(tmp_path):
 
 
 def test_spool_lease_expiry_and_reclaim(tmp_path):
-    spool = Spool(str(tmp_path / "sp"), lease_s=60.0)
+    # backoff_base_s=0: this test re-claims immediately after reclaim
+    # (backoff behavior is covered by test_spool_reclaim_backoff)
+    spool = Spool(str(tmp_path / "sp"), lease_s=60.0, backoff_base_s=0.0)
     spool.submit("k1", {"x": 1})
     job = spool.claim("dead-worker")
     assert spool.claim("w2") is None               # queue drained
@@ -174,7 +176,8 @@ def test_spool_poison_job_quarantined_after_retry_budget(tmp_path):
     """Kill-loop: a poison job (every worker that claims it dies without
     heartbeating) is reclaimed at most ``retry_budget`` times, then
     quarantined to failed/ — never lease-reclaimed forever."""
-    spool = Spool(str(tmp_path / "sp"), lease_s=60.0, retry_budget=2)
+    spool = Spool(str(tmp_path / "sp"), lease_s=60.0, retry_budget=2,
+                  backoff_base_s=0.0)
     spool.submit("poison", {"x": 1})
     cycles = 0
     while cycles < 10:                             # kill loop

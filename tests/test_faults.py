@@ -1,0 +1,613 @@
+"""Chaos suite: deterministic fault injection against the exec substrate.
+
+The load-bearing property: under ANY seeded fault plan — crashes at
+every named crash-point, torn done-file writes, heartbeat stalls, clock
+skew — a spool always quiesces with every job either **done exactly
+once** (record byte-identical to a fault-free run) or **quarantined
+with a diagnosis**. No lost jobs, no duplicate journal events, no torn
+done files surfacing as results.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.exec import CampaignJournal, Spool, SpoolBackend, run_worker
+from repro.exec.backend import BackendError, failure_record, \
+    is_failure_record
+from repro.exec.faults import CRASH_SITES, FaultPlan, InjectedCrash, \
+    plan_scope
+from repro.exec.janitor import janitor_pass, run_janitor
+from repro.exec.spool import PublishError, backoff_s
+from repro.sweep import RefineSpec, SweepSpec
+from repro.sweep.runner import run_campaign
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("REPRO_FAULTS", None)
+    return env
+
+
+# -- synthetic workload ----------------------------------------------------
+
+N_JOBS = 6
+
+
+def _payloads():
+    return {f"job{i:02d}": {"key": f"job{i:02d}", "i": i}
+            for i in range(N_JOBS)}
+
+
+def _refine(p):
+    if p.get("poison"):
+        raise ValueError("poisoned payload")
+    return {"out": p["i"] * 2, "echo": p["key"]}
+
+
+def _golden():
+    """Fault-free reference records (what every surviving done file must
+    byte-match)."""
+    with tempfile.TemporaryDirectory() as td:
+        spool = Spool(os.path.join(td, "sp"), backoff_base_s=0.0)
+        for k, p in _payloads().items():
+            spool.submit(k, p)
+        run_worker(spool.root, worker="golden", refine_fn=_refine,
+                   spool=spool)
+        return {k: spool.result(k)["record"] for k in _payloads()}
+
+
+GOLDEN = _golden()
+
+
+def _backdate_active(spool, age_s=1e4):
+    d = os.path.join(spool.root, "active")
+    old = time.time() - age_s
+    for f in os.listdir(d):
+        try:
+            os.utime(os.path.join(d, f), (old, old))
+        except FileNotFoundError:
+            pass
+
+
+def _chaos_drain(spool, plan, refine_fn=_refine, cycles=400):
+    """Kill-loop: 'respawn' a fresh worker after every injected death,
+    expiring leftover leases in between (time-warped, not slept)."""
+    with plan_scope(plan):
+        for c in range(cycles):
+            counts = spool.counts()
+            if counts["jobs"] == 0 and counts["active"] == 0:
+                return c
+            try:
+                run_worker(spool.root, worker=f"w{c:03d}", hb_s=999.0,
+                           refine_fn=refine_fn, spool=spool)
+            except (InjectedCrash, RuntimeError, OSError):
+                pass                   # the "SIGKILL"; respawn next cycle
+            _backdate_active(spool)
+            try:
+                spool.reclaim()
+            except OSError:
+                pass                   # injected torn quarantine write
+    raise AssertionError(
+        f"chaos drain did not quiesce in {cycles} cycles: "
+        f"{spool.counts()}")
+
+
+def _check_invariants(spool, payloads, golden):
+    counts = spool.counts()
+    assert counts["jobs"] == 0 and counts["active"] == 0
+    # "done" means a *parseable* result — a torn done file left behind
+    # by a job that later terminally failed is wreckage, not a result
+    done = {k for k in payloads if spool.result(k) is not None}
+    failed = {k for k in payloads if spool.failure(k) is not None}
+    # no lost jobs: every submitted key reached a terminal state
+    assert done | failed == set(payloads)
+    for k in sorted(done):
+        rec = spool.result(k)["record"]
+        assert json.dumps(rec, sort_keys=True) == \
+            json.dumps(golden[k], sort_keys=True), k
+    for k in sorted(set(payloads) - done):
+        diag = spool.failure(k)
+        assert diag is not None and diag.get("error"), k
+    # the janitor clears any torn-done wreckage; afterwards the cheap
+    # listing view agrees with the parse-everything view
+    janitor_pass(spool, tmp_age_s=-1.0, corrupt_age_s=-1.0,
+                 compact_age_s=None)
+    assert spool.done_keys() & set(payloads) == done
+
+
+# -- the chaos soak property ----------------------------------------------
+
+_site = st.sampled_from(CRASH_SITES)
+_kind = st.sampled_from(["crash", "error"])
+_rate = st.floats(min_value=0.0, max_value=0.9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.lists(st.tuples(_site, _kind, _rate), min_size=0, max_size=4),
+       st.floats(min_value=0.0, max_value=0.6),
+       st.booleans())
+def test_chaos_soak_exactly_once_or_quarantined(seed, crash_rules,
+                                                torn_rate, stalls):
+    rules = {}
+    for site, kind, rate in crash_rules:
+        key = (kind, site)
+        rules[key] = max(rules.get(key, 0.0), rate)
+    if torn_rate > 0.0:
+        rules[("torn", "publish-done")] = torn_rate
+    if stalls:
+        rules[("stall", "heartbeat")] = 0.5
+    plan = FaultPlan(seed, rules)
+    with tempfile.TemporaryDirectory() as td:
+        spool = Spool(os.path.join(td, "sp"), lease_s=60.0,
+                      backoff_base_s=0.0)
+        payloads = _payloads()
+        for k, p in payloads.items():
+            spool.submit(k, p)
+        _chaos_drain(spool, plan)
+        _check_invariants(spool, payloads, GOLDEN)
+
+
+def test_chaos_soak_is_deterministic():
+    """The same seeded plan produces the same terminal partition —
+    injected failures are replayable inputs, not flakes."""
+    plan_spec = ("7:crash@before-publish=0.55,error@mid-refine=0.35,"
+                 "torn@publish-done=0.4,crash@after-publish=0.3")
+    outcomes = []
+    for _ in range(2):
+        plan = FaultPlan.parse(plan_spec)
+        with tempfile.TemporaryDirectory() as td:
+            spool = Spool(os.path.join(td, "sp"), lease_s=60.0,
+                          backoff_base_s=0.0)
+            payloads = _payloads()
+            for k, p in payloads.items():
+                spool.submit(k, p)
+            _chaos_drain(spool, plan)
+            _check_invariants(spool, payloads, GOLDEN)
+            outcomes.append((tuple(sorted(spool.done_keys())),
+                             tuple(sorted(spool.failed_keys()))))
+    assert outcomes[0] == outcomes[1]
+
+
+def test_chaos_crash_at_every_site_single_shot(tmp_path):
+    """rate-1.0 crash at each named site: the job survives through the
+    retry budget (attempt-indexed redraw never lets it pass), ends
+    quarantined with the budget diagnosis — except after-publish, where
+    the result is already durable and must be served exactly-once."""
+    for i, site in enumerate(CRASH_SITES):
+        plan = FaultPlan(i, {("crash", site): 1.0})
+        spool = Spool(str(tmp_path / f"sp-{site}"), lease_s=60.0,
+                      backoff_base_s=0.0)
+        spool.submit("k", {"key": "k", "i": 1})
+        _chaos_drain(spool, plan)
+        if site == "after-publish":
+            assert spool.result("k")["record"] == {"out": 2, "echo": "k"}
+        else:
+            diag = spool.failure("k")
+            assert diag and "retry budget exhausted" in diag["error"]
+
+
+# -- fault-plan unit behavior ---------------------------------------------
+
+def test_fault_plan_parse_roundtrip_and_validation():
+    plan = FaultPlan.parse("42:crash@mid-refine=0.25,torn@publish-done=1")
+    assert plan.seed == 42
+    assert plan.rate("crash", "mid-refine") == 0.25
+    assert plan.rate("torn", "publish-done") == 1.0
+    assert FaultPlan.parse(plan.to_spec()).rules == plan.rules
+    with pytest.raises(ValueError):
+        FaultPlan.parse("no-seed-part")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("x:crash@mid-refine=1")      # non-int seed
+    with pytest.raises(ValueError):
+        FaultPlan.parse("1:crash@nowhere=1")         # unknown site
+    with pytest.raises(ValueError):
+        FaultPlan.parse("1:gremlin@mid-refine=1")    # unknown kind
+    with pytest.raises(ValueError):
+        FaultPlan.parse("1:torn@mid-refine=1")       # torn needs a publish
+
+
+def test_fault_decisions_are_pure_and_attempt_indexed():
+    plan = FaultPlan(9, {("crash", "mid-refine"): 0.5})
+    draws = [plan.fires("crash", "mid-refine", f"key{i}", 0)
+             for i in range(200)]
+    assert draws == [plan.fires("crash", "mid-refine", f"key{i}", 0)
+                     for i in range(200)]            # pure
+    assert 40 < sum(draws) < 160                     # ~rate, not const
+    # a retried job redraws: some key flips between attempts
+    assert any(plan.fires("crash", "mid-refine", f"key{i}", 0)
+               != plan.fires("crash", "mid-refine", f"key{i}", 1)
+               for i in range(50))
+
+
+def test_soft_crash_is_base_exception():
+    plan = FaultPlan(1, {("crash", "after-claim"): 1.0})
+    with pytest.raises(InjectedCrash):
+        plan.maybe_crash("after-claim", "k")
+    assert not isinstance(InjectedCrash("x"), Exception)
+
+
+def test_clock_skew_shifts_spool_now(tmp_path):
+    spool = Spool(str(tmp_path / "sp"))
+    with plan_scope(FaultPlan(0, {("skew", "clock"): 500.0})):
+        assert spool._now() - time.time() > 400.0
+    assert abs(spool._now() - time.time()) < 60.0
+
+
+# -- release-safety regressions (the satellite crash-window fix) -----------
+
+def test_crash_between_publish_and_release_is_recoverable(tmp_path):
+    """A kill in the window between the done publish and the lease
+    release leaks the lease — and reclaim must drop the stale claim
+    WITHOUT re-running the job (the result is already durable)."""
+    spool = Spool(str(tmp_path / "sp"), backoff_base_s=0.0)
+    spool.submit("k", {"key": "k", "i": 3})
+    with plan_scope(FaultPlan(1, {("crash", "after-publish"): 1.0})):
+        with pytest.raises(InjectedCrash):
+            run_worker(spool.root, worker="w0", refine_fn=_refine,
+                       spool=spool)
+    assert spool.result("k")["record"] == {"out": 6, "echo": "k"}
+    assert spool.counts()["active"] == 1             # leaked, as a kill would
+    _backdate_active(spool)
+    assert spool.reclaim() == 0                      # dropped, not re-queued
+    assert spool.counts() == {"jobs": 0, "active": 0, "done": 1,
+                              "failed": 0}
+
+
+def test_recoverable_error_after_publish_releases_lease(tmp_path):
+    """A plain exception in the same window must release the lease
+    (the pre-fix behavior leaked it until lease expiry)."""
+    spool = Spool(str(tmp_path / "sp"), backoff_base_s=0.0)
+    spool.submit("k", {"key": "k", "i": 2})
+    with plan_scope(FaultPlan(2, {("error", "after-publish"): 1.0})):
+        n = run_worker(spool.root, worker="w0", refine_fn=_refine,
+                       spool=spool)
+    assert n == 1                                    # counted as done
+    assert spool.counts() == {"jobs": 0, "active": 0, "done": 1,
+                              "failed": 0}
+
+
+def test_failed_done_publish_requeues_with_backoff(tmp_path):
+    """A torn done publish must requeue the job immediately (bumped
+    attempts, lease released) instead of leaking the claim."""
+    spool = Spool(str(tmp_path / "sp"), backoff_base_s=0.0)
+    spool.submit("k", {"key": "k", "i": 1})
+    with plan_scope(FaultPlan(3, {("torn", "publish-done"): 1.0})):
+        job = spool.claim("w0")
+        with pytest.raises(PublishError):
+            spool.complete(job, {"r": 1}, wall_s=0.0)
+        assert spool.counts()["active"] == 0         # released
+        assert spool.counts()["jobs"] == 1           # requeued
+        job2 = spool.claim("w1")
+        assert job2 is not None and job2.attempts == 1
+    # the torn done file never surfaced as a result, and a healthy
+    # publish atomically replaces the wreckage
+    spool.complete(job2, {"r": 1}, wall_s=0.0)
+    assert spool.result("k")["record"] == {"r": 1}
+
+
+def test_failed_fail_publish_requeues(tmp_path):
+    spool = Spool(str(tmp_path / "sp"), backoff_base_s=0.0)
+    spool.submit("k", {"key": "k", "i": 1})
+    with plan_scope(FaultPlan(4, {("torn", "publish-fail"): 1.0})):
+        job = spool.claim("w0")
+        with pytest.raises(PublishError):
+            spool.fail(job, "boom")
+        assert spool.counts()["active"] == 0
+        assert spool.counts()["jobs"] == 1
+    job2 = spool.claim("w1")
+    spool.fail(job2, "boom")
+    assert spool.failure("k")["error"] == "boom"
+
+
+# -- retry backoff ---------------------------------------------------------
+
+def test_backoff_deterministic_jittered_capped():
+    assert backoff_s("k", 0) == 0.0
+    assert backoff_s("k", 1, base_s=0.0) == 0.0
+    b = backoff_s("k", 1, base_s=2.0, cap_s=60.0)
+    assert b == backoff_s("k", 1, base_s=2.0, cap_s=60.0)  # pure
+    assert 1.5 <= b <= 2.5                                 # 2s +/- 25%
+    assert backoff_s("k", 2, base_s=2.0, cap_s=60.0) > b * 1.2
+    assert backoff_s("k", 50, base_s=2.0, cap_s=60.0) <= 75.0  # capped
+    # distinct keys de-synchronize
+    assert backoff_s("a", 1) != backoff_s("b", 1)
+
+
+def test_spool_reclaim_backoff(tmp_path):
+    spool = Spool(str(tmp_path / "sp"), lease_s=60.0, backoff_base_s=5.0)
+    spool.submit("k", {"i": 1})
+    spool.claim("dead")
+    _backdate_active(spool)
+    assert spool.reclaim() == 1
+    with open(os.path.join(spool.root, "jobs", "k.json")) as f:
+        entry = json.load(f)
+    assert entry["attempts"] == 1
+    assert entry["not_before"] > time.time() + 3.0
+    assert spool.claim("w1") is None                 # backed off
+    assert spool.counts()["jobs"] == 1               # still queued
+    eta = spool.next_retry_eta()
+    assert eta is not None and 3.0 < eta <= 6.5
+    st_ = spool.status()
+    assert st_["backed_off"] == 1 and st_["quarantined"] == 0
+    assert st_["next_retry_eta_s"] == pytest.approx(eta, abs=1.0)
+    # time-warp past the window (clock-skew fault = free time machine)
+    with plan_scope(FaultPlan(0, {("skew", "clock"): 100.0})):
+        job = spool.claim("w1")
+        assert job is not None and job.attempts == 1
+        spool.complete(job, {"ok": 1}, wall_s=0.0)
+    assert spool.result("k")["record"] == {"ok": 1}
+
+
+def test_status_counts_quarantined(tmp_path):
+    spool = Spool(str(tmp_path / "sp"), lease_s=60.0, retry_budget=0,
+                  backoff_base_s=0.0)
+    spool.submit("poison", {"i": 1})
+    spool.claim("w0")
+    _backdate_active(spool)
+    assert spool.reclaim() == 1                      # budget 0: quarantine
+    st_ = spool.status()
+    assert st_["failed"] == 1 and st_["quarantined"] == 1
+
+
+# -- janitor ---------------------------------------------------------------
+
+def test_janitor_gc_tmp_and_corrupt_done(tmp_path):
+    spool = Spool(str(tmp_path / "sp"))
+    old = time.time() - 3600.0
+    stale_tmp = os.path.join(spool.root, "done", "tmpabc123.tmp")
+    with open(stale_tmp, "w") as f:
+        f.write("{}")
+    os.utime(stale_tmp, (old, old))
+    fresh_tmp = os.path.join(spool.root, "jobs", "tmpdef456.tmp")
+    with open(fresh_tmp, "w") as f:
+        f.write("{}")
+    torn = os.path.join(spool.root, "done", "torn.json")
+    with open(torn, "w") as f:
+        f.write('{"key": "torn", "reco')
+    os.utime(torn, (old, old))
+    stats = janitor_pass(spool, tmp_age_s=60.0, corrupt_age_s=60.0)
+    assert stats["tmp_gc"] == 1 and stats["corrupt_gc"] == 1
+    assert not os.path.exists(stale_tmp) and not os.path.exists(torn)
+    assert os.path.exists(fresh_tmp)                 # too young to GC
+
+
+def test_janitor_compaction_preserves_results(tmp_path):
+    spool = Spool(str(tmp_path / "sp"), backoff_base_s=0.0)
+    for k, p in _payloads().items():
+        spool.submit(k, p)
+    run_worker(spool.root, worker="w0", refine_fn=_refine, spool=spool)
+    done_dir = os.path.join(spool.root, "done")
+    old = time.time() - 3600.0
+    for f in os.listdir(done_dir):
+        os.utime(os.path.join(done_dir, f), (old, old))
+    stats = janitor_pass(spool, compact_age_s=60.0)
+    assert stats["compacted"] == N_JOBS
+    assert [f for f in os.listdir(done_dir) if f.endswith(".json")] == []
+    assert os.path.exists(os.path.join(done_dir, "_compact.jsonl"))
+    # results, counts, and idempotent submit all see through compaction
+    assert spool.done_keys() == set(_payloads())
+    assert spool.counts()["done"] == N_JOBS
+    for k in _payloads():
+        assert spool.result(k)["record"] == GOLDEN[k]
+        assert not spool.submit(k, {"i": 0})
+    # a second pass is a no-op
+    assert janitor_pass(spool, compact_age_s=60.0)["compacted"] == 0
+
+
+def test_detached_janitor_unstrands_dead_fleet(tmp_path):
+    """The acceptance scenario, in-process: runner and workers SIGKILLed
+    (leases stale, nobody polling) — a janitor alone must return the
+    work to jobs/ so the next worker to attach can finish it."""
+    spool = Spool(str(tmp_path / "sp"), lease_s=60.0, backoff_base_s=0.0)
+    for k, p in _payloads().items():
+        spool.submit(k, p)
+    for _ in range(3):                               # dead fleet
+        spool.claim("killed-worker")
+    _backdate_active(spool)
+    assert spool.counts()["active"] == 3
+    journal = str(tmp_path / "j.jsonl")
+    reclaimed = run_janitor(spool.root, interval_s=0.01, iterations=2,
+                            journal_path=journal)
+    assert reclaimed == 3
+    assert spool.counts()["active"] == 0
+    # janitor passes are journaled (the Perfetto janitor lane)
+    view = CampaignJournal.load(journal)
+    assert view.janitor_events
+    assert sum(ev.get("reclaimed", 0) for ev in view.janitor_events) == 3
+    from repro.obs.perfetto import trace_campaign_journal
+    trace = trace_campaign_journal(journal)
+    assert any(e.get("cat") == "janitor"
+               for e in trace["traceEvents"] if e.get("ph") == "i")
+    # a fresh worker now finishes everything
+    run_worker(spool.root, worker="late", refine_fn=_refine, spool=spool)
+    assert spool.done_keys() == set(_payloads())
+
+
+# -- SpoolBackend stall fail-fast + graceful degradation -------------------
+
+def test_spool_backend_stall_fails_fast_naming_root(tmp_path):
+    root = str(tmp_path / "sp")
+    bk = SpoolBackend(root, workers=0, poll_s=0.02, stall_s=0.3)
+    t0 = time.time()
+    with pytest.raises(BackendError) as ei:
+        bk.refine([{"i": 1}], keys=["k1"])
+    assert time.time() - t0 < 10.0                   # not timeout_s/forever
+    msg = str(ei.value)
+    assert "stalled" in msg and root in msg and "janitor" in msg
+
+
+def _drain_thread(root, refine_fn):
+    stop = threading.Event()
+
+    def loop():
+        while not stop.is_set():
+            if run_worker(root, worker="tw", hb_s=0.2,
+                          refine_fn=refine_fn) == 0:
+                time.sleep(0.02)
+
+    t = threading.Thread(target=loop, daemon=True)
+    t.start()
+    return stop, t
+
+
+def test_spool_backend_allow_partial_degrades_failures(tmp_path):
+    root = str(tmp_path / "sp")
+
+    def fn(p):
+        if p["i"] == 1:
+            raise ValueError("bad cell")
+        return {"out": p["i"]}
+
+    stop, t = _drain_thread(root, fn)
+    jpath = str(tmp_path / "j.jsonl")
+    j = CampaignJournal(jpath)
+    try:
+        bk = SpoolBackend(root, workers=0, poll_s=0.05)
+        recs = bk.refine([{"i": 0}, {"i": 1}, {"i": 2}],
+                         keys=["a", "b", "c"], journal=j,
+                         allow_partial=True)
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    j.end({"refined": 3})
+    assert [r.get("out") for r in recs] == [0, None, 2]
+    assert is_failure_record(recs[1]) and "bad cell" in recs[1]["error"]
+    view = CampaignJournal.load(jpath)
+    assert view.counts() == {"done": 2, "failed": 1, "cached": 0,
+                             "other": 0, "total": 3}
+    # exactly one journal event per point — no duplicates from polling
+    assert len([e for e in view.events if e.get("ev") == "point"]) == 3
+    assert not view.all_done()
+    assert view.all_done(allow_failed=True)
+
+
+def test_spool_backend_without_allow_partial_still_aborts(tmp_path):
+    root = str(tmp_path / "sp")
+    stop, t = _drain_thread(
+        root, lambda p: (_ for _ in ()).throw(ValueError("always")))
+    try:
+        bk = SpoolBackend(root, workers=0, poll_s=0.05)
+        with pytest.raises(BackendError):
+            bk.refine([{"i": 0}], keys=["a"])
+    finally:
+        stop.set()
+        t.join(timeout=10)
+
+
+# -- allow-partial campaigns ----------------------------------------------
+
+def _small_spec(**kw):
+    base = dict(
+        name="faults_campaign",
+        workloads=["mobilenet_v2"],
+        preset="paper_skew",
+        axes={"clock_ghz": [0.5, 1.0]},
+        n_tiles=[2],
+        refine=RefineSpec(mode="all"),
+    )
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def test_campaign_allow_partial_marks_failed_cells(tmp_path, monkeypatch):
+    """A deliberately poisoned cell must not abort the campaign: it
+    becomes a status:failed record with the error attached, and the
+    summary reports coverage."""
+    import repro.sweep.refine as refine_mod
+    real = refine_mod.refine_point
+
+    def poisoned(payload):
+        if payload.get("hw", {}).get("clock_ghz") == 0.5:
+            raise RuntimeError("injected poison cell")
+        return real(payload)
+
+    monkeypatch.setattr(refine_mod, "refine_point", poisoned)
+    spec = _small_spec()
+    jpath = str(tmp_path / "j.jsonl")
+    res = run_campaign(spec, workers=0, use_cache=False,
+                       journal_path=jpath, allow_partial=True)
+    failed = [r for r in res.records if r.get("status") == "failed"]
+    ok = [r for r in res.records if r.get("refined")]
+    assert len(failed) == 1 and len(ok) == 1
+    assert failed[0]["failed"] and not failed[0]["refined"]
+    assert "injected poison cell" in failed[0]["error"]
+    assert res.summary["failed"] == 1
+    assert res.summary["coverage"] == pytest.approx(0.5)
+    assert res.summary["failed_points"] == [failed[0]["point_id"]]
+    # _best ignores degraded records
+    assert res.best("time_ns")["point_id"] == ok[0]["point_id"]
+    view = CampaignJournal.load(jpath)
+    assert view.all_done(allow_failed=True) and not view.all_done()
+    # without the flag, the same poison aborts the campaign
+    with pytest.raises(RuntimeError):
+        run_campaign(spec, workers=0, use_cache=False)
+
+
+def test_failure_records_never_cached(tmp_path):
+    from repro.exec.backend import _cache_put
+    from repro.sweep.cache import ResultCache
+    cache = ResultCache(str(tmp_path / "cache"))
+    _cache_put(cache, "k", failure_record("boom"))
+    assert cache.get("k") is None
+
+
+# -- CLI -------------------------------------------------------------------
+
+def test_exec_cli_janitor_and_status(tmp_path):
+    root = str(tmp_path / "sp")
+    spool = Spool(root)
+    spool.submit("k1", {"i": 1})
+    spool.claim("dead")
+    _backdate_active(spool)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.exec", "janitor", root, "--once"],
+        env=_env(), capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stderr
+    assert "janitor exit: 1 jobs reclaimed" in out.stdout
+    assert spool.counts()["active"] == 0
+    # reclaimed job carries a retry backoff -> visible in status
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.exec", "status", root],
+        env=_env(), capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stderr
+    rows = dict(line.split(",", 1) for line in
+                out.stdout.strip().splitlines())
+    assert rows["jobs"] == "1" and rows["backed_off"] == "1"
+    assert float(rows["next_retry_eta_s"]) > 0.0
+    assert rows["quarantined"] == "0"
+
+
+def test_env_driven_fault_plan_kills_subprocess_worker(tmp_path):
+    """REPRO_FAULTS makes a real subprocess worker die hard (exit 137)
+    at the injected crash point — the mechanism the CI chaos lane uses."""
+    root = str(tmp_path / "sp")
+    spool = Spool(root)
+    spool.submit("k1", {"i": 1})
+    env = _env()
+    env["REPRO_FAULTS"] = "1:crash@after-claim=1"
+    code = ("import sys; from repro.exec.worker import run_worker; "
+            "run_worker(sys.argv[1], refine_fn=lambda p: {'ok': 1})")
+    out = subprocess.run([sys.executable, "-c", code, root], env=env,
+                         capture_output=True, text=True, timeout=60)
+    assert out.returncode == 137, (out.returncode, out.stderr)
+    assert spool.counts()["active"] == 1             # lease left behind
+    # without the env plan the respawned worker finishes the job
+    _backdate_active(spool)
+    spool2 = Spool(root, backoff_base_s=0.0)
+    spool2.reclaim()
+    out = subprocess.run([sys.executable, "-c", code, root], env=_env(),
+                         capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stderr
+    assert spool.result("k1")["record"] == {"ok": 1}
